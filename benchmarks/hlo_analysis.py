@@ -1,0 +1,422 @@
+"""HLO text analysis: per-device FLOPs / HBM bytes / collective traffic.
+
+XLA's compiled.cost_analysis() does NOT multiply while-loop trip counts (a
+lax.scan body is counted once), so none of its totals are usable for a model
+that scans over layers.  This module re-derives all three roofline terms from
+the post-SPMD-partitioning HLO text:
+
+  * computations are split with a column-0 state machine,
+  * while-loop trip counts come from the largest s32 constant in the loop
+    condition; multipliers propagate down the call graph (ENTRY=1, a
+    collective inside the 56-group layer scan counts 56x),
+  * compute term: dot-op FLOPs = 2 * prod(result dims) * prod(lhs contracting
+    dims) (MXU work; elementwise VPU work is ignored by design),
+  * memory term: per-op HBM traffic = result + operand bytes for ops at
+    control-flow level (fusion internals live in registers/VMEM and are
+    excluded; the fusion node's own operands/results are the HBM boundary),
+  * collective term: result-shape bytes converted to link traffic:
+        all-gather          ~ result          all-reduce     ~ 2 x result
+        reduce-scatter      ~ result x group  all-to-all     ~ result
+        collective-permute  ~ result
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "s2": 1, "u2": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_WORD_PAREN = re.compile(r"([\w\-]+)\($")
+
+
+def _split_op(rhs: str) -> tuple[str, str, str] | None:
+    """Split 'TYPE opcode(operands...), attrs' where TYPE may be a tuple type
+    containing parens and /*index=N*/ comments.  The opcode is the first
+    word+'(' at paren depth 0 after the type."""
+    depth = 0
+    for i, ch in enumerate(rhs):
+        if ch == "(":
+            if depth == 0:
+                m = _WORD_PAREN.search(rhs[: i + 1])
+                if m and (m.start() == 0 or rhs[m.start() - 1] == " "):
+                    return rhs[: m.start()].strip(), m.group(1), rhs[i + 1 :]
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+    return None
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "while", "call",
+    "conditional", "bitcast", "after-all", "custom-call", "partition-id",
+    "replica-id", "iota",
+}
+
+
+def _parse_shapes(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",")] if dims else []))
+    return out
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _parse_shapes(text):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if cur is None:
+            if line and not line[0].isspace() and line.rstrip().endswith("{"):
+                name = line.split()[0]
+                if name == "ENTRY" and len(line.split()) > 1:
+                    name = line.split()[1]
+                name = name.split("(")[0].lstrip("%").rstrip(",")
+                cur = name
+                comps[cur] = []
+            continue
+        if line and not line[0].isspace() and line.strip().startswith("}"):
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+class _Comp:
+    def __init__(self, name: str, lines: list[str]):
+        self.name = name
+        self.lines = lines
+        self.defs: dict[str, str] = {}  # op name -> result-type text
+        self.opcodes: dict[str, str] = {}  # op name -> opcode
+        self.op_rest: dict[str, str] = {}  # op name -> operands/attrs text
+        self.ops: list[tuple[str, str, str, str]] = []  # (name, type, opcode, rest)
+        for ln in lines:
+            dm = _DEF_RE.match(ln)
+            if not dm:
+                continue
+            opname, rhs = dm.group(1), dm.group(2)
+            parts = _split_op(rhs)
+            if parts is None:
+                continue
+            rtype, opcode, rest = parts
+            self.defs[opname] = rtype
+            self.opcodes[opname] = opcode
+            self.op_rest[opname] = rest
+            self.ops.append((opname, rtype, opcode, rest))
+
+    def shape_of(self, operand: str) -> list[tuple[str, list[int]]]:
+        t = self.defs.get(operand.lstrip("%"))
+        return _parse_shapes(t) if t else []
+
+    def op_of(self, operand: str) -> str | None:
+        return self.opcodes.get(operand.lstrip("%"))
+
+
+def _trip_count(comp: "_Comp | None") -> int:
+    if comp is None:
+        return 1
+    best = 1
+    for ln in comp.lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(comp: _Comp, rtype: str, rest: str) -> float:
+    shapes = _parse_shapes(rtype)
+    result_elems = 1
+    for _, dims in shapes:
+        for d in dims:
+            result_elems *= d
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    mo = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+    operands = [o.strip() for o in rest.split(")")[0].split(",") if o.strip().startswith("%")]
+    csize = 1
+    if mo and operands:
+        lhs_shapes = comp.shape_of(operands[0])
+        if lhs_shapes:
+            _, dims = lhs_shapes[0]
+            for idx in (int(i) for i in mo.group(1).split(",") if i):
+                if idx < len(dims):
+                    csize *= dims[idx]
+    return 2.0 * result_elems * csize
+
+
+def analyze(hlo: str, *, detail: bool = False) -> dict:
+    raw = _split_computations(hlo)
+    comps = {name: _Comp(name, lines) for name, lines in raw.items()}
+
+    loops: list[tuple[str, str, str]] = []
+    calls: list[tuple[str, str]] = []          # control-flow calls (bytes count)
+    fusion_calls: list[tuple[str, str]] = []   # fusion/to_apply (bytes skip)
+    for comp in comps.values():
+        for opname, rtype, opcode, rest in comp.ops:
+            if opcode == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", rest)
+                mc = re.search(r"condition=%?([\w.\-]+)", rest)
+                if mb and mc:
+                    loops.append((comp.name, mb.group(1), mc.group(1)))
+            elif opcode in ("call", "conditional", "async-start"):
+                for m in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", rest):
+                    calls.append((comp.name, m.group(1)))
+                for m in re.finditer(r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-]+)", rest):
+                    calls.append((comp.name, m.group(1)))
+            else:
+                for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", rest):
+                    fusion_calls.append((comp.name, m.group(1)))
+
+    called = (
+        {b for _, b, _ in loops} | {c for _, _, c in loops}
+        | {t for _, t in calls} | {t for _, t in fusion_calls}
+    )
+    mult: dict[str, float] = defaultdict(float)
+    fusion_ctx: dict[str, bool] = defaultdict(bool)  # True if reached via fusion
+    for name in comps:
+        if name not in called:
+            mult[name] = 1.0
+
+    for _ in range(128):
+        changed = False
+        for parent, body, cond in loops:
+            if mult[parent] <= 0:
+                continue
+            tc = _trip_count(comps.get(cond))
+            for tgt, k in ((body, tc), (cond, tc)):
+                want = mult[parent] * k
+                if mult[tgt] < want:
+                    mult[tgt] = want
+                    changed = True
+                if fusion_ctx[parent] and not fusion_ctx[tgt]:
+                    fusion_ctx[tgt] = True
+                    changed = True
+        for parent, tgt in calls:
+            if mult[parent] > 0 and mult[tgt] < mult[parent]:
+                mult[tgt] = mult[parent]
+                changed = True
+            if mult[parent] > 0 and fusion_ctx[parent] and not fusion_ctx[tgt]:
+                fusion_ctx[tgt] = True
+                changed = True
+        for parent, tgt in fusion_calls:
+            if mult[parent] > 0:
+                if mult[tgt] < mult[parent]:
+                    mult[tgt] = mult[parent]
+                    changed = True
+                if not fusion_ctx[tgt]:
+                    fusion_ctx[tgt] = True
+                    changed = True
+        if not changed:
+            break
+
+    while_bodies = {b for _, b, _ in loops} | {
+        t for p, t in calls if any(p == b for _, b, _ in loops)
+    }
+    # computations transitively inside while bodies (fusion bodies included)
+    inside_loop: set[str] = set(while_bodies)
+    for _ in range(32):
+        grew = False
+        for p, t in calls + fusion_calls:
+            if p in inside_loop and t not in inside_loop:
+                inside_loop.add(t)
+                grew = True
+        for p, b, c in loops:
+            if p in inside_loop:
+                for t in (b, c):
+                    if t not in inside_loop:
+                        inside_loop.add(t)
+                        grew = True
+        if not grew:
+            break
+
+    flops = 0.0
+    hbm_bytes = 0.0        # unfused upper bound: every op result+operands
+    fused_bytes = 0.0      # fused model: DS/DUS + dot streams + carried state
+    per_coll: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, int] = defaultdict(int)
+    detail_bytes: dict[str, float] = defaultdict(float)
+    detail_flops: dict[str, float] = defaultdict(float)
+    detail_coll: dict[str, float] = defaultdict(float)
+
+    def _meta_tag(rest: str) -> str:
+        m = re.search(r'op_name="([^"]*)"', rest)
+        if not m:
+            return "<none>"
+        # Keep the trailing, most specific path elements.
+        return "/".join(m.group(1).split("/")[-3:])[:90]
+
+    for comp in comps.values():
+        m = mult[comp.name] if mult[comp.name] > 0 else 0.0
+        if m == 0.0:
+            continue
+        for opname, rtype, opcode, rest in comp.ops:
+            if opcode == "dot":
+                f = m * _dot_flops(comp, rtype, rest)
+                flops += f
+                if detail:
+                    detail_flops[f"dot:{_meta_tag(rest)}"] += f
+            if opcode in _COLLECTIVES or any(
+                opcode == c + sfx for c in _COLLECTIVES for sfx in ("-start",)
+            ):
+                base = opcode.replace("-start", "")
+                if base in _COLLECTIVES:
+                    nbytes = _shape_bytes(rtype)
+                    group = 1
+                    gm = re.search(r"replica_groups=\{\{([\d,]+)\}", rest)
+                    if gm:
+                        group = len(gm.group(1).split(","))
+                    else:
+                        gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+                        if gm2:
+                            group = int(gm2.group(2))
+                    if base == "all-reduce":
+                        traffic = 2 * nbytes
+                    elif base == "reduce-scatter":
+                        traffic = nbytes * group
+                    else:
+                        traffic = nbytes
+                    per_coll[base] += m * traffic
+                    coll_counts[base] += 1
+                    if detail:
+                        detail_coll[f"{base}:{_meta_tag(rest)}"] += m * traffic
+            # HBM bytes, unfused upper bound: control-flow-level ops only.
+            if not fusion_ctx[comp.name] and opcode not in _SKIP_BYTES_OPS:
+                nbytes = _shape_bytes(rtype)
+                for operand in re.findall(r"%[\w.\-]+", rest.split("metadata")[0]):
+                    nbytes += _operand_bytes(comp, operand)
+                hbm_bytes += m * nbytes
+
+            # HBM bytes, fused model (TPU semantics: loop-body intermediates
+            # live in VMEM; HBM sees slice reads, update writes, weight
+            # streams into the MXU, and the loop-carried state):
+            if comp.name in inside_loop:
+                add = 0.0
+                if opcode == "dynamic-slice":
+                    add = m * _shape_bytes(rtype)
+                elif opcode == "dynamic-update-slice":
+                    ops_ = _operand_names(rest)
+                    if len(ops_) >= 2:
+                        add = m * _operand_bytes(comp, ops_[1])
+                elif opcode == "dot":
+                    for operand in _operand_names(rest)[:2]:
+                        src = comp.op_of(operand)
+                        if src in ("dynamic-slice",):
+                            continue  # stream already counted at the slice
+                        add += m * _operand_bytes(comp, operand)
+                fused_bytes += add
+                if detail and add:
+                    detail_bytes[f"{opcode}:{_meta_tag(rest)}"] += add
+            elif not fusion_ctx[comp.name] and opcode not in _SKIP_BYTES_OPS:
+                nbytes = _shape_bytes(rtype)
+                for operand in re.findall(r"%[\w.\-]+", rest.split("metadata")[0]):
+                    nbytes += _operand_bytes(comp, operand)
+                fused_bytes += m * nbytes
+                if detail and nbytes:
+                    detail_bytes[f"{opcode}:{_meta_tag(rest)}"] += m * nbytes
+
+    # Loop-carried state traffic: per iteration, each ROOT-tuple element of a
+    # while body that is not a pass-through get-tuple-element costs a
+    # read+write of its own size.
+    for _, body, _ in loops:
+        comp = comps.get(body)
+        if comp is None or mult[body] <= 0:
+            continue
+        root = None
+        for ln in comp.lines:
+            if "ROOT" in ln:
+                root = ln
+        if not root:
+            continue
+        parts = _split_op(root.split("=", 1)[1].strip() if "=" in root else "")
+        if not parts or parts[1] != "tuple":
+            continue
+        for operand in _operand_names(parts[2]):
+            d = comp.defs.get(operand.lstrip("%"), "")
+            src = comp.op_of(operand)
+            if src in ("get-tuple-element", "parameter"):
+                continue  # pass-through
+            if src == "fusion":
+                # In-place accumulation (lax.map output / scan ys buffers):
+                # a DUS-fusion's traffic is its update slice, counted above.
+                called = re.search(
+                    r"calls=%?([\w.\-]+)", comp.op_rest.get(operand.lstrip("%"), "")
+                )
+                if called and any(
+                    oc == "dynamic-update-slice"
+                    for _, _, oc, _ in comps.get(called.group(1), _EMPTY).ops
+                ):
+                    continue
+            fused_bytes += 2 * mult[body] * _shape_bytes(d)
+            if detail:
+                detail_bytes[f"carry:{body[:40]}:{operand[:30]}"] += (
+                    2 * mult[body] * _shape_bytes(d)
+                )
+
+    out = {
+        "flops": flops,
+        "hbm_bytes": fused_bytes,
+        "hbm_bytes_unfused": hbm_bytes,
+        "collective_bytes": float(sum(per_coll.values())),
+        "collective_per_op": dict(per_coll),
+        "collective_counts": dict(coll_counts),
+    }
+    if detail:
+        out["detail_bytes"] = dict(
+            sorted(detail_bytes.items(), key=lambda kv: -kv[1])[:25]
+        )
+        out["detail_flops"] = dict(
+            sorted(detail_flops.items(), key=lambda kv: -kv[1])[:25]
+        )
+        out["detail_coll"] = dict(
+            sorted(detail_coll.items(), key=lambda kv: -kv[1])[:25]
+        )
+    return out
+
+
+class _EmptyComp:
+    ops: list = []
+
+
+_EMPTY = _EmptyComp()
+
+
+def _operand_names(rest: str) -> list[str]:
+    return re.findall(r"%[\w.\-]+", rest.split("), ")[0])
+
+
+def _operand_bytes(comp: "_Comp", operand: str) -> int:
+    total = 0
+    for dt, dims in comp.shape_of(operand):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo: str) -> dict:
+    a = analyze(hlo)
+    return {
+        "total_bytes": a["collective_bytes"],
+        "per_op": a["collective_per_op"],
+        "counts": a["collective_counts"],
+    }

@@ -1,0 +1,44 @@
+"""Recompute results/dryrun/*.json roofline inputs from the saved HLO dumps
+(results/hlo/*.hlo.txt.gz) with the current analyzer — no recompilation."""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import hlo_analysis as H  # noqa: E402
+
+
+def main(result_dir="results/dryrun", hlo_dir="results/hlo"):
+    n = 0
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            continue
+        tag = f"{rec['arch']}_{rec['shape']}_{rec['mesh']}"
+        hpath = os.path.join(hlo_dir, tag + ".hlo.txt.gz")
+        if not os.path.exists(hpath):
+            print(f"[warn] no HLO for {tag}")
+            continue
+        with gzip.open(hpath, "rt") as f:
+            hlo = f.read()
+        a = H.analyze(hlo)
+        rec["flops_per_device"] = a["flops"]
+        rec["bytes_per_device"] = a["hbm_bytes"]
+        rec["bytes_per_device_unfused"] = a["hbm_bytes_unfused"]
+        rec["collective_bytes_per_device"] = a["collective_bytes"]
+        rec["collective_ops"] = a["collective_counts"]
+        rec["collective_per_op"] = a["collective_per_op"]
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        n += 1
+    print(f"rebuilt {n} records")
+
+
+if __name__ == "__main__":
+    main()

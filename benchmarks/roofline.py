@@ -1,0 +1,132 @@
+"""§Roofline: three-term roofline per (arch x shape x mesh) from the dry-run.
+
+  compute term    = HLO_FLOPs / (chips x peak_FLOP/s)      [s]
+  memory term     = HLO_bytes / (chips x HBM_bw)           [s]
+  collective term = collective_bytes / (chips x link_bw)   [s]
+
+HLO terms are *per-device* from benchmarks/hlo_analysis.py (loop-aware), so
+"/(chips x ...)" is already applied; the table reports per-step seconds, the
+dominant term, MODEL_FLOPS = 6ND (dense) / 6*N_active*D (MoE) over the global
+batch, and MODEL_FLOPS / (chips x HLO_FLOPs) — the useful-compute fraction.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core import targets as targets_lib
+
+T = targets_lib.TPU_V5E
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["chips"]
+    fl = rec["flops_per_device"]
+    by = rec["bytes_per_device"]
+    co = rec["collective_bytes_per_device"]
+    t_compute = fl / T.peak_flops_bf16
+    t_memory = by / T.hbm_bytes_per_s
+    t_coll = co / T.ici_bytes_per_s
+    dom = max(
+        (("compute", t_compute), ("memory", t_memory), ("collective", t_coll)),
+        key=lambda kv: kv[1],
+    )[0]
+
+    # Useful model FLOPs for this step (global).
+    if rec["kind"] == "train":
+        tokens = 4096 * 256
+        mult = 6.0
+    elif rec["shape"] == "prefill_32k":
+        tokens = 32768 * 32
+        mult = 2.0
+    elif rec["shape"] == "decode_32k":
+        tokens = 128  # one token per sequence
+        mult = 2.0
+    else:  # long_500k decode
+        tokens = 1
+        mult = 2.0
+    model_flops = mult * rec["active_params"] * tokens
+    useful = model_flops / (chips * fl) if fl else 0.0
+
+    bound = max(t_compute, t_memory, t_coll)
+    step_time = bound  # roofline lower bound on step time
+    mfu = model_flops / (chips * T.peak_flops_bf16 * step_time) if step_time else 0.0
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": model_flops,
+        "useful_fraction": useful,
+        "roofline_mfu": mfu,
+    }
+
+
+def load_results(result_dir: str = "results/dryrun") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if "skipped" in rec:
+            out.append(rec)
+            continue
+        rec.update(roofline_terms(rec))
+        out.append(rec)
+    return out
+
+
+def markdown_table(records: list[dict], mesh: str = "16x16") -> str:
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful frac | roofline MFU |\n"
+        "|---|---|---|---|---|---|---|---|---|\n"
+    )
+    rows = []
+    for r in records:
+        if "skipped" in r:
+            if mesh == "16x16":
+                rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | SKIP: {r['skipped'][:40]} | — | — | — |")
+            continue
+        if r["mesh"] != mesh:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | {r['dominant']} | "
+            f"{r['model_flops']:.2e} | {r['useful_fraction']:.3f} | {r['roofline_mfu']:.3f} |"
+        )
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    recs = load_results()
+    ok = [r for r in recs if "skipped" not in r]
+    print(f"# {len(ok)} compiled cells, {len(recs) - len(ok)} documented skips")
+    for mesh in ("16x16", "2x16x16"):
+        if any(r.get("mesh") == mesh for r in recs):
+            print(f"\n## mesh {mesh} (baseline)\n")
+            print(markdown_table(recs, mesh))
+    for r in ok:
+        print(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']},"
+            f"{max(r['t_compute_s'], r['t_memory_s'], r['t_collective_s'])*1e6:.1f},"
+            f"{r['dominant']}"
+        )
+    if os.path.isdir("results/dryrun_prod"):
+        prod = [r for r in load_results("results/dryrun_prod") if "skipped" not in r]
+        base = {(r["arch"], r["shape"], r["mesh"]): r for r in ok}
+        print("\n# production profile (EXPERIMENTS.md §Perf levers)")
+        for r in prod:
+            b = base.get((r["arch"], r["shape"], r["mesh"]))
+            pb = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+            bb = max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"]) if b else 0
+            speed = f"{bb / pb:.2f}x" if b and pb else ""
+            print(
+                f"roofline_prod/{r['arch']}/{r['shape']}/{r['mesh']},"
+                f"{pb*1e6:.1f},{r['dominant']};speedup={speed}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+# One function per paper table. Prints ``name,us_per_call,derived`` CSV.
+#
+#   table1_parity      — paper Table 1 (accuracy parity HF vs 10x-IREE)
+#   table2_throughput  — paper Table 2 (prefill/decode tokens/s per path)
+#   kernel_bench       — per-microkernel correctness + timing (Figs 1-2 analog)
+#   roofline           — §Roofline terms from the dry-run (TPU projection),
+#                        emitted when results/dryrun/ exists.
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import ablation_tiles, kernel_bench, table1_parity, table2_throughput
+
+    print("name,us_per_call_or_value,derived")
+    table1_parity.main()
+    table2_throughput.main()
+    kernel_bench.main()
+    ablation_tiles.main()
+
+    if os.path.isdir("results/dryrun") and os.listdir("results/dryrun"):
+        from benchmarks import roofline
+
+        roofline.main()
+    else:
+        print("roofline/SKIPPED,0,run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""End-to-end serving driver (the paper's workload kind): continuous-batching
+engine over a reduced Llama-3.2-1B with the mmt4d serving path —
+prefill GEMM kernels, decode GEMV kernels, slot-based admission.
+
+  PYTHONPATH=src python examples/serve_llama.py [--requests 12]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.core.packed import EncodingConfig
+from repro.models import transformer as T
+from repro.serving import engine as engine_lib
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--requests", type=int, default=12)
+ap.add_argument("--slots", type=int, default=4)
+ap.add_argument("--max-new", type=int, default=12)
+args = ap.parse_args()
+
+cfg = registry.get_reduced("llama3.2-1b")
+enc = EncodingConfig(enabled=True, backend="xla")
+params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
+eng = engine_lib.Engine(params, cfg, enc, slots=args.slots, max_seq=96)
+
+rng = np.random.RandomState(0)
+arrival = 0.0
+t0 = time.time()
+for i in range(args.requests):
+    plen = rng.randint(4, 20)
+    eng.submit(engine_lib.Request(
+        uid=i, prompt=rng.randint(1, cfg.vocab_size, plen).astype(np.int32),
+        max_new_tokens=args.max_new,
+    ))
+
+steps = 0
+while eng.queue or any(r is not None for r in eng.slot_req):
+    eng.step()
+    steps += 1
+dt = time.time() - t0
+total = sum(len(r.generated) for r in eng.finished)
+print(f"served {len(eng.finished)} requests / {total} tokens "
+      f"in {dt:.2f}s over {steps} engine steps ({total/dt:.2f} tok/s)")
+for r in eng.finished[:5]:
+    print(f"  req {r.uid}: |prompt|={len(r.prompt)} gen={r.generated}")

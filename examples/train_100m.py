@@ -1,0 +1,32 @@
+"""Train a ~100M-parameter Llama-style model with the full production stack:
+mmt4d-encoded weights, AdamW, grad clipping, async checkpointing, straggler
+watchdog, deterministic packed data.
+
+~100M params is slow on this 1-core CPU container; default is 60 steps
+(--steps 300 for the full run).  Loss is printed every 10 steps and must
+decrease.
+
+  PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+
+from repro.launch import train as train_lib
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+args = ap.parse_args()
+
+# ~100M-class config: 8 layers x d=768 x ff=3072, 32k vocab ≈ 106M params.
+sys.argv = [
+    "train", "--arch", "llama3.2-1b",
+    "--layers", "8", "--d-model", "768", "--d-ff", "3072", "--vocab", "32768",
+    "--steps", str(args.steps), "--batch", "8", "--seq", "256",
+    "--lr", "1e-3", "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "20",
+    "--log-every", "10",
+]
+train_lib.main()

@@ -1,0 +1,56 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, reduced
+
+_ARCH_MODULES = {
+    "mixtral-8x22b": "repro.configs.mixtral_8x22b",
+    "grok-1-314b": "repro.configs.grok_1_314b",
+    "qwen2.5-14b": "repro.configs.qwen2_5_14b",
+    "qwen2.5-32b": "repro.configs.qwen2_5_32b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "yi-9b": "repro.configs.yi_9b",
+    "whisper-tiny": "repro.configs.whisper_tiny",
+    "rwkv6-1.6b": "repro.configs.rwkv6_1_6b",
+    "recurrentgemma-9b": "repro.configs.recurrentgemma_9b",
+    "internvl2-26b": "repro.configs.internvl2_26b",
+    # The paper's own model (not part of the assigned 10).
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+}
+
+ASSIGNED_ARCHS = tuple(k for k in _ARCH_MODULES if k != "llama3.2-1b")
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[arch]).CONFIG
+
+
+def get_reduced(arch: str, **overrides) -> ModelConfig:
+    return reduced(get_config(arch), **overrides)
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return SHAPES[name]
+
+
+def cell_is_runnable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Dry-run cell gating (skips documented in DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "long_500k needs sub-quadratic attention (full-attention arch)"
+    return True, ""
+
+
+def all_cells() -> list[tuple[str, str, bool, str]]:
+    """[(arch, shape, runnable, reason)] for the 40-cell grid."""
+    out = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for shape in SHAPES.values():
+            ok, why = cell_is_runnable(cfg, shape)
+            out.append((arch, shape.name, ok, why))
+    return out

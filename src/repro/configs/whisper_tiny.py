@@ -1,0 +1,23 @@
+"""whisper-tiny [audio] — enc-dec, conv frontend STUB (precomputed frame
+embeddings).  [arXiv:2212.04356; unverified]"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="encdec",
+    num_layers=4,            # decoder layers
+    encoder_layers=4,
+    d_model=384,
+    num_heads=6,
+    num_kv_heads=6,
+    head_dim=64,
+    d_ff=1536,
+    vocab_size=51865,
+    block_pattern=("encdec_attn",),
+    norm_kind="layernorm",
+    mlp_kind="gelu",
+    frontend="audio",
+    frontend_tokens=1500,    # 30 s of audio at 50 Hz post-conv
+    sub_quadratic=False,     # full-attention decoder -> long_500k skipped
+)

@@ -1,0 +1,160 @@
+"""Device-encoding materialization — the paper's compiler pass, as a JAX library.
+
+IREE's `iree-codegen-materialize-device-encoding` pass rewrites contraction ops
+into `tensor.pack -> linalg.mmt4d -> tensor.unpack` with target/phase-aware tile
+sizes.  Here the same decision is made by `select_tile_sizes`, and the rewrite
+is performed by `encode_matmul` / `PackedLinear` (core/packed.py): every dense
+projection in the model zoo routes through this module.
+
+Layouts (paper semantics, identical on TPU):
+    pack(lhs, (M0, K0)) : (M, K)            -> (M1, K1, M0, K0)
+    pack(rhs, (N0, K0)) : (N, K)  [= W^T]   -> (N1, K1, N0, K0)   # the 't' in mmt4d
+    mmt4d(lhs4, rhs4)   :                   -> (M1, N1, M0, N0), f32 accumulate
+    unpack(out4, (M,N)) : (M1, N1, M0, N0)  -> (M, N)
+
+Two tiling levels (TPU adaptation):
+  * the *pack tile* (M0, N0, K0) — the layout granularity, matched to the
+    compute unit (MXU 128x128 for GEMM; VREG sublane x lane for GEMV).  This is
+    the analogue of the paper's register tile.
+  * the *kernel block* (BM1, BN1, BK1) — how many pack tiles one Pallas grid
+    step keeps resident in VMEM.  The paper's ceiling is register spills; ours
+    is the VMEM budget, encoded in `select_kernel_blocks`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+
+import jax.numpy as jnp
+
+from repro.core import targets as targets_lib
+
+
+class Phase(enum.Enum):
+    """Execution phase.  Matmul shape regime differs per phase (paper §Methodology)."""
+
+    PREFILL = "prefill"   # GEMM: M = batch*seq rows
+    DECODE = "decode"     # GEMV-class: M = batch rows (1 token each)
+    TRAIN = "train"       # GEMM, fwd+bwd
+
+
+@dataclasses.dataclass(frozen=True)
+class TileSizes:
+    m0: int
+    n0: int
+    k0: int
+
+    def as_tuple(self) -> tuple[int, int, int]:
+        return (self.m0, self.n0, self.k0)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelBlocks:
+    """Pack-tile multiples held in VMEM per grid step."""
+
+    bm1: int
+    bn1: int
+    bk1: int
+
+
+def paper_tile_sizes(phase: Phase, vlen_bits: int = targets_lib.RISCV_VLEN_BITS) -> TileSizes:
+    """The paper's published RVV rule (Methodology step 1):
+
+        prefill: M,N,K = 6, VLEN/8, 1
+        decode : M,N,K = 1, VLEN/4, 1
+    """
+    if phase in (Phase.PREFILL, Phase.TRAIN):
+        return TileSizes(6, vlen_bits // 8, 1)
+    return TileSizes(1, vlen_bits // 4, 1)
+
+
+def select_tile_sizes(
+    phase: Phase,
+    *,
+    lhs_dtype=jnp.bfloat16,
+    m_hint: int | None = None,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
+) -> TileSizes:
+    """Target/phase-aware pack-tile selection (the VLEN-aware rule, re-solved for TPU).
+
+    GEMM phases want MXU-native 128-multiples.  DECODE is bandwidth-bound: the
+    M tile collapses to the (few) live batch rows, and N widens so the kernel
+    streams weights with full lanes — the direct analogue of the paper widening
+    N to VLEN/4 for GEMV.
+    """
+    if target.mxu_dim == 1:
+        # Vector-only target: reproduce the paper's rule exactly.
+        return paper_tile_sizes(phase)
+
+    itemsize = jnp.dtype(lhs_dtype).itemsize
+    sub = targets_lib.sublanes_for_dtype(target, itemsize)
+    if phase in (Phase.PREFILL, Phase.TRAIN):
+        return TileSizes(m0=target.mxu_dim, n0=target.mxu_dim, k0=target.mxu_dim)
+    # DECODE: m0 covers the live rows, capped at one sublane group.
+    rows = m_hint if m_hint is not None else 1
+    m0 = max(1, min(sub, rows))
+    return TileSizes(m0=m0, n0=4 * target.lane_count, k0=target.mxu_dim)
+
+
+def select_kernel_blocks(
+    tiles: TileSizes,
+    phase: Phase,
+    *,
+    m1: int,
+    n1: int,
+    k1: int,
+    lhs_itemsize: int = 2,
+    rhs_itemsize: int = 2,
+    acc_itemsize: int = 4,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
+    vmem_fraction: float = 0.5,
+) -> KernelBlocks:
+    """VMEM-budgeted block selection — replaces the paper's register-spill ceiling.
+
+    Per grid step the kernel holds:
+        lhs block  BM1*BK1*M0*K0*lhs_itemsize
+        rhs block  BN1*BK1*N0*K0*rhs_itemsize
+        acc scratch BM1*BN1*M0*N0*acc_itemsize
+    and the total must fit `vmem_fraction * target.vmem_bytes` (double-buffering
+    headroom for the pipelined HBM->VMEM copies takes the rest).
+    """
+    budget = target.vmem_bytes * vmem_fraction
+    m0, n0, k0 = tiles.as_tuple()
+
+    def footprint(bm1: int, bn1: int, bk1: int) -> float:
+        lhs = bm1 * bk1 * m0 * k0 * lhs_itemsize
+        rhs = bn1 * bk1 * n0 * k0 * rhs_itemsize
+        acc = bm1 * bn1 * m0 * n0 * acc_itemsize
+        return lhs + rhs + acc
+
+    bm1, bn1, bk1 = 1, 1, 1
+    # Greedy doubling, largest-marginal-benefit first: K depth amortizes the
+    # accumulator, then N (weight reuse), then M (activation reuse).
+    order = ("bk1", "bn1", "bm1") if phase is not Phase.DECODE else ("bn1", "bk1", "bm1")
+    grew = True
+    while grew:
+        grew = False
+        for name in order:
+            cand = dict(bm1=bm1, bn1=bn1, bk1=bk1)
+            lim = dict(bm1=m1, bn1=n1, bk1=k1)
+            if cand[name] * 2 > lim[name]:
+                continue
+            cand[name] *= 2
+            if footprint(**cand) <= budget:
+                bm1, bn1, bk1 = cand["bm1"], cand["bn1"], cand["bk1"]
+                grew = True
+    return KernelBlocks(bm1=bm1, bn1=bn1, bk1=bk1)
+
+
+def _round_up(x: int, mult: int) -> int:
+    return mult * math.ceil(x / mult) if mult > 0 else x
+
+
+def padded_dim(dim: int, tile: int) -> int:
+    return _round_up(dim, tile)
+
+
+def packed_shape(rows: int, cols: int, t0: int, t1: int) -> tuple[int, int, int, int]:
+    return (math.ceil(rows / t0), math.ceil(cols / t1), t0, t1)

@@ -1,0 +1,70 @@
+"""Hardware target descriptions.
+
+The paper's `materialize-device-encoding` pass keys tile selection off the
+target's vector parameters (VLEN for RVV).  We model the same idea as an
+explicit TargetSpec consumed by `select_tile_sizes` and by the roofline
+analysis.  TPU v5e is the primary target; the RVV entry documents the paper's
+original hardware so the selection logic can be tested against the paper's
+published tile sizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class TargetSpec:
+    name: str
+    # Compute.
+    peak_flops_bf16: float  # FLOP/s per chip
+    peak_flops_f32: float
+    # Memory system.
+    hbm_bytes_per_s: float
+    hbm_bytes: int
+    vmem_bytes: int  # fast on-chip memory usable by one kernel instance
+    # Interconnect (per-link, one direction).
+    ici_bytes_per_s: float
+    # Compute-unit geometry.
+    mxu_dim: int  # systolic array edge (matmul native tile)
+    lane_count: int  # VREG lanes
+    sublane_count: int  # VREG sublanes for 32-bit types
+
+
+# TPU v5e — the numbers used throughout EXPERIMENTS.md §Roofline.
+TPU_V5E = TargetSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    peak_flops_f32=98.5e12,
+    hbm_bytes_per_s=819e9,
+    hbm_bytes=16 * 1024**3,
+    vmem_bytes=16 * 1024**2,
+    ici_bytes_per_s=50e9,
+    mxu_dim=128,
+    lane_count=128,
+    sublane_count=8,
+)
+
+# The paper's board (MILK-V Jupiter, SpacemiT K1/X60): VLEN=256-bit RVV.
+# Kept so tests can check that our selection rule reproduces the paper's
+# published tiles when pointed at the paper's hardware.
+RISCV_VLEN256 = TargetSpec(
+    name="riscv-rvv-vlen256",
+    peak_flops_bf16=2 * 1.66e9 * 16,   # 2 flop/FMA * clock * (VLEN/16 f16 lanes)
+    peak_flops_f32=2 * 1.66e9 * 8,
+    hbm_bytes_per_s=10.6e9,            # LPDDR4x-ish
+    hbm_bytes=8 * 1024**3,
+    vmem_bytes=32 * 1024,              # register file + L1 working set proxy
+    ici_bytes_per_s=0.0,
+    mxu_dim=1,                         # no matrix unit: vector-only
+    lane_count=16,                     # VLEN/16 f16 elements per vreg
+    sublane_count=1,
+)
+
+# RVV VLEN in *bits* for the paper-rule check.
+RISCV_VLEN_BITS = 256
+
+
+def sublanes_for_dtype(target: TargetSpec, itemsize: int) -> int:
+    """TPU packs narrow dtypes into deeper sublane tiles: f32→8, bf16→16, i8→32."""
+    return target.sublane_count * max(1, 4 // itemsize)

@@ -1,0 +1,264 @@
+"""Dispatch wrappers — the analogue of IREE's microkernel ABI boundary.
+
+`encoded_matmul` is the single entry point the model zoo calls for every dense
+projection.  It performs the paper's rewrite (pack -> mmt4d -> unpack) with
+phase/target-selected tiles and routes the mmt4d to one of:
+
+    backend="reference" : plain contraction, NO encoding (upstream-IREE analogue)
+    backend="xla"       : pack + einsum-mmt4d + unpack, pure jnp (dry-run path)
+    backend="pallas"    : the Pallas microkernels (prefill GEMM / decode GEMV)
+    backend="fused"     : beyond-paper fused pack+mmt4d+unpack Pallas kernel
+
+Layout-unification decision (TPU adaptation, see DESIGN.md §2): weights are
+packed ONCE, in the GEMM-native (N0=128, K0=128) tile layout, and shared by
+prefill and decode.  The paper's phase-specific tile rule (decode N0=VLEN/4)
+is honoured at the *kernel block* level instead: the decode GEMV kernel streams
+`bn1` adjacent N tiles per grid step (bn1*128 ≈ the paper's wide-N), so serving
+does not hold two packed copies of every weight.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.core import targets as targets_lib
+from repro.kernels import fused_pack_mmt4d as fused_lib
+from repro.kernels import mmt4d as mmt4d_lib
+from repro.kernels import mmt4d_gemv as gemv_lib
+from repro.kernels import mmt4d_q8 as q8_lib
+from repro.kernels import pack as pack_lib
+from repro.kernels import ref
+
+Phase = encoding.Phase
+
+BACKENDS = ("reference", "xla", "pallas", "fused")
+
+
+def _largest_divisor_leq(n: int, cap: int) -> int:
+    cap = max(1, min(n, cap))
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def pack_rhs(
+    w_t: jnp.ndarray,
+    *,
+    tiles: encoding.TileSizes | None = None,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
+    shard_multiple: int = 1,
+) -> jnp.ndarray:
+    """Pack a transposed weight (N, K) into (N1, K1, N0, K0). One-time cost.
+
+    Always uses the GEMM-native layout (see layout-unification note above).
+    `shard_multiple` pads the N1/K1 tile counts so they divide the mesh axes
+    (production setting: 16); padding provably stays zero under training.
+    """
+    if tiles is None:
+        tiles = encoding.select_tile_sizes(
+            encoding.Phase.PREFILL, lhs_dtype=w_t.dtype, target=target
+        )
+    p4 = ref.pack(w_t, (tiles.n0, tiles.k0))
+    if shard_multiple > 1:
+        n1, k1, n0, k0 = p4.shape
+        pn = (-n1) % shard_multiple
+        pk = (-k1) % shard_multiple
+        if pn or pk:
+            p4 = jnp.pad(p4, ((0, pn), (0, pk), (0, 0), (0, 0)))
+    return p4
+
+
+def _select_m0(
+    phase: Phase, dtype, m: int, target: targets_lib.TargetSpec
+) -> int:
+    if target.mxu_dim == 1:
+        return encoding.paper_tile_sizes(phase).m0
+    if phase is Phase.DECODE:
+        sub = targets_lib.sublanes_for_dtype(target, jnp.dtype(dtype).itemsize)
+        return max(1, min(sub, m))
+    return target.mxu_dim
+
+
+def _pad_rows(x2d: jnp.ndarray, mult: int) -> jnp.ndarray:
+    pad = (-x2d.shape[0]) % mult
+    if pad:
+        x2d = jnp.pad(x2d, ((0, pad), (0, 0)))
+    return x2d
+
+
+def encoded_matmul(
+    x: jnp.ndarray,
+    rhs4: jnp.ndarray,
+    *,
+    n: int,
+    phase: Phase,
+    backend: str = "xla",
+    m0: int | None = None,
+    blocks: tuple[int, int, int] | None = None,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
+    out_dtype: Any = None,
+    acc_dtype: Any = jnp.float32,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """x (..., K) @ W^T where rhs4 is the packed (N1, K1, N0, K0) weight.
+
+    Returns (..., n) in `out_dtype` (default: x.dtype). `acc_dtype` is the
+    cross-shard reduction dtype (see EncodingConfig.reduce_dtype); in-shard
+    MXU accumulation is f32 regardless.  `blocks` overrides the VMEM-model
+    block selection (perf hillclimb knob).
+    """
+    assert backend in BACKENDS, backend
+    out_dtype = out_dtype or x.dtype
+    n1, k1, n0, k0 = rhs4.shape
+    k = x.shape[-1]
+    assert k <= k1 * k0, (x.shape, rhs4.shape)
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k)
+    m = x2d.shape[0]
+    if k != k1 * k0:  # K padding lives in the packed weight; mirror it on lhs.
+        x2d = jnp.pad(x2d, ((0, 0), (0, k1 * k0 - k)))
+
+    if backend == "reference":
+        w_t = ref.unpack(rhs4, (n, k1 * k0))[:, :k]
+        out = ref.matmul_reference(x2d[:, :k], w_t).astype(out_dtype)
+        return out.reshape(*lead, n)
+
+    if backend == "fused":
+        xp = _pad_rows(x2d, 128)
+        bm1 = _largest_divisor_leq(xp.shape[0] // 128, 4)
+        bn1 = _largest_divisor_leq(n1, 2)
+        bk1 = _largest_divisor_leq(k1, 4)
+        out2d = fused_lib.fused_pack_mmt4d_pallas(
+            xp,
+            rhs4,
+            blocks=(bm1, bn1, bk1) if blocks is None else blocks,
+            out_dtype=jnp.float32,
+            interpret=interpret,
+        )
+        return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
+
+    if m0 is None:
+        m0 = _select_m0(phase, x.dtype, m, target)
+    xp = _pad_rows(x2d, m0)
+    m1 = xp.shape[0] // m0
+    lhs4 = ref.pack(xp, (m0, k0))
+
+    if backend == "xla":
+        out4 = ref.mmt4d(lhs4, rhs4, acc_dtype=acc_dtype)
+    elif phase is Phase.DECODE and m1 == 1:
+        # The paper's decode GEMV microkernel: weight-streaming, wide-N blocks.
+        want_bn1 = _gemv_bn1(n0, k0, k1, target) if blocks is None else blocks[1]
+        bn1 = _largest_divisor_leq(n1, want_bn1)
+        out4 = gemv_lib.mmt4d_gemv_pallas(lhs4, rhs4, bn1=bn1, interpret=interpret)
+    else:
+        # The paper's prefill GEMM microkernel (also used for skinny decode GEMM
+        # when many batch rows are live).
+        if blocks is None:
+            tiles = encoding.TileSizes(m0=m0, n0=n0, k0=k0)
+            kb = encoding.select_kernel_blocks(
+                tiles,
+                phase,
+                m1=m1,
+                n1=n1,
+                k1=k1,
+                lhs_itemsize=jnp.dtype(x.dtype).itemsize,
+                rhs_itemsize=jnp.dtype(rhs4.dtype).itemsize,
+                target=target,
+            )
+            blocks = (kb.bm1, kb.bn1, kb.bk1)
+        bm1 = _largest_divisor_leq(m1, blocks[0])
+        bn1 = _largest_divisor_leq(n1, blocks[1])
+        bk1 = _largest_divisor_leq(k1, blocks[2])
+        out4 = mmt4d_lib.mmt4d_pallas(
+            lhs4, rhs4, blocks=(bm1, bn1, bk1), interpret=interpret
+        )
+
+    out2d = ref.unpack(out4, (xp.shape[0], n1 * n0))
+    return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
+
+
+def _gemv_bn1(n0: int, k0: int, k1: int, target: targets_lib.TargetSpec) -> int:
+    """Decode streaming width: the paper's wide-N rule, VMEM-budgeted.
+
+    select_tile_sizes(DECODE).n0 (=512 lanes on TPU) sets the *minimum* stream
+    width; the ceiling is half of VMEM for the per-step weight block.
+    """
+    want = encoding.select_tile_sizes(Phase.DECODE, target=target).n0 // n0
+    per_tile = k1 * n0 * k0 * 2  # bf16 weights
+    cap = max(1, (target.vmem_bytes // 2) // max(per_tile, 1))
+    return max(1, min(max(want, 1), cap))
+
+
+# ---- int8 serving path (beyond paper) --------------------------------------
+
+
+def pack_rhs_q8(
+    w_t: jnp.ndarray, *, shard_multiple: int = 1
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Quantize (per output channel) + pack. Returns (rhs4_q int8, s_w (N1,N0))."""
+    q, s = ref.quantize_rows(w_t)
+    rhs4 = pack_rhs(q, shard_multiple=shard_multiple)
+    n1, _, n0, _ = rhs4.shape
+    s_pad = jnp.zeros((n1 * n0,), jnp.float32).at[: s.shape[0]].set(s)
+    return rhs4, s_pad.reshape(n1, n0)
+
+
+def encoded_matmul_q8(
+    x: jnp.ndarray,
+    rhs4_q: jnp.ndarray,
+    s_w: jnp.ndarray,
+    *,
+    n: int,
+    phase: Phase,
+    backend: str = "xla",
+    out_dtype: Any = None,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """w8a8 encoded matmul: dynamic per-row activation quant, packed int8
+    weights, s32 accumulation, factorized scales (see kernels/mmt4d_q8.py)."""
+    out_dtype = out_dtype or x.dtype
+    n1, k1, n0, k0 = rhs4_q.shape
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k)
+    m = x2d.shape[0]
+    if k != k1 * k0:
+        x2d = jnp.pad(x2d, ((0, 0), (0, k1 * k0 - k)))
+    xq, s_a = ref.quantize_rows(x2d)
+
+    m0 = _select_m0(phase, jnp.int8, m, targets_lib.TPU_V5E)
+    xq = _pad_rows(xq, m0)
+    m1 = xq.shape[0] // m0
+    lhs4 = ref.pack(xq, (m0, k0))
+    sa_pad = jnp.zeros((m1 * m0,), jnp.float32).at[:m].set(s_a)
+    sa2 = sa_pad.reshape(m1, m0)
+
+    if backend == "pallas":
+        bm1 = _largest_divisor_leq(m1, 4)
+        bn1 = _largest_divisor_leq(n1, 4)
+        bk1 = _largest_divisor_leq(k1, 4)
+        out4 = q8_lib.mmt4d_q8_pallas(
+            lhs4, rhs4_q, sa2, s_w, blocks=(bm1, bn1, bk1), interpret=interpret
+        )
+    else:
+        out4 = ref.mmt4d_q8(lhs4, rhs4_q, sa2, s_w)
+    out2d = ref.unpack(out4, (xq.shape[0], n1 * n0))
+    return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
+
+
+# Re-exports for benchmarks/tests.
+pack_pallas = pack_lib.pack_pallas
+unpack_pallas = pack_lib.unpack_pallas
+mmt4d_pallas = mmt4d_lib.mmt4d_pallas
+mmt4d_gemv_pallas = gemv_lib.mmt4d_gemv_pallas
+fused_pack_mmt4d_pallas = fused_lib.fused_pack_mmt4d_pallas
+
+
+@functools.lru_cache(maxsize=None)
+def default_tiles(phase: Phase, dtype_name: str = "bfloat16") -> encoding.TileSizes:
+    return encoding.select_tile_sizes(phase, lhs_dtype=jnp.dtype(dtype_name))

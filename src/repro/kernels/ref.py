@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are (a) the correctness references the Pallas kernels are validated
+against in tests, and (b) the `xla` backend used by the 512-device dry-run —
+XLA lowers the einsum on the packed 4-D layout directly, which keeps
+cost_analysis faithful to the mmt4d compute while avoiding interpret-mode
+blow-up at dry-run scale.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+
+def pack(x: jnp.ndarray, tile: tuple[int, int]) -> jnp.ndarray:
+    """tensor.pack: (R, C) -> (R1, C1, T0, T1), zero-padded, tiles contiguous."""
+    t0, t1 = tile
+    r, c = x.shape
+    r1 = math.ceil(r / t0)
+    c1 = math.ceil(c / t1)
+    xp = jnp.pad(x, ((0, r1 * t0 - r), (0, c1 * t1 - c)))
+    return xp.reshape(r1, t0, c1, t1).transpose(0, 2, 1, 3)
+
+
+def unpack(y: jnp.ndarray, shape: tuple[int, int]) -> jnp.ndarray:
+    """tensor.unpack: (R1, C1, T0, T1) -> (R, C), cropping pad."""
+    r1, c1, t0, t1 = y.shape
+    r, c = shape
+    return y.transpose(0, 2, 1, 3).reshape(r1 * t0, c1 * t1)[:r, :c]
+
+
+def mmt4d(lhs4: jnp.ndarray, rhs4: jnp.ndarray, acc_dtype=jnp.float32) -> jnp.ndarray:
+    """linalg.mmt4d: lhs (M1,K1,M0,K0) x rhs (N1,K1,N0,K0) -> (M1,N1,M0,N0).
+
+    out[m1,n1,m0,n0] = sum_{k1,k0} lhs[m1,k1,m0,k0] * rhs[n1,k1,n0,k0]
+    (rhs is the transposed operand — the trailing 't').  f32 accumulation,
+    matching the paper's f16xf16->f32 microkernels.
+    """
+    return jnp.einsum(
+        "mkac,nkbc->mnab",
+        lhs4,
+        rhs4,
+        preferred_element_type=acc_dtype,
+    )
+
+
+def mmt4d_unfused(
+    lhs: jnp.ndarray,
+    rhs_t: jnp.ndarray,
+    tiles: tuple[int, int, int],
+    acc_dtype=jnp.float32,
+) -> jnp.ndarray:
+    """Full encoded matmul on 2-D operands: pack -> mmt4d -> unpack.
+
+    lhs: (M, K); rhs_t: (N, K) (already transposed, as stored by PackedLinear).
+    Returns (M, N) in acc_dtype.
+    """
+    m0, n0, k0 = tiles
+    m, k = lhs.shape
+    n, k2 = rhs_t.shape
+    assert k == k2, (lhs.shape, rhs_t.shape)
+    lhs4 = pack(lhs, (m0, k0))
+    rhs4 = pack(rhs_t, (n0, k0))
+    out4 = mmt4d(lhs4, rhs4, acc_dtype=acc_dtype)
+    return unpack(out4, (m, n))
+
+
+def matmul_reference(lhs: jnp.ndarray, rhs_t: jnp.ndarray, acc_dtype=jnp.float32) -> jnp.ndarray:
+    """The un-encoded baseline (upstream-IREE analogue): plain contraction."""
+    return jnp.einsum("mk,nk->mn", lhs, rhs_t, preferred_element_type=acc_dtype)
+
+
+# ---- int8 serving quantization (beyond paper; kernels/mmt4d_q8.py) ---------
+
+
+def quantize_rows(x2d: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-row int8: returns (q (R, C) int8, scale (R,) f32)."""
+    s = jnp.maximum(jnp.max(jnp.abs(x2d.astype(jnp.float32)), axis=1), 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x2d.astype(jnp.float32) / s[:, None]), -127, 127)
+    return q.astype(jnp.int8), s
+
+
+def mmt4d_q8(lhs4_q, rhs4_q, s_a, s_w) -> jnp.ndarray:
+    """Oracle for kernels/mmt4d_q8.py (same operand layout)."""
+    acc = jnp.einsum(
+        "mkac,nkbc->mnab",
+        lhs4_q.astype(jnp.int32),
+        rhs4_q.astype(jnp.int32),
+    ).astype(jnp.float32)
+    return acc * s_a[:, None, :, None] * s_w[None, :, None, :]

@@ -1,0 +1,344 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Deliverable (e): multi-pod dry-run.  Lowers + compiles every
+# (architecture x input shape x mesh) cell with ShapeDtypeStruct stand-ins
+# (no real allocation), prints memory_analysis / cost_analysis, and records
+# the roofline terms consumed by EXPERIMENTS.md §Dry-run / §Roofline.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] --out results/
+#
+# NOTE the XLA_FLAGS line above MUST run before any jax import: jax locks the
+# device count at first init.  Smoke tests and benchmarks never import this
+# module, so they keep seeing 1 CPU device.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.packed import EncodingConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import transformer as T
+from repro.parallel import sharding
+from repro.serving import engine as engine_lib
+from repro.train import optimizer as opt_lib
+from repro.train import trainer as trainer_lib
+
+PRODUCTION_ENC = EncodingConfig(
+    enabled=True, backend="xla", interpret=False, shard_multiple=16
+)
+# bf16 Adam moments: halves optimizer HBM so the 314B config's train step
+# fits 16 GiB/chip at 256 chips (see EXPERIMENTS.md §Dry-run).
+PRODUCTION_OPT = opt_lib.OptimizerConfig(moment_dtype="bfloat16")
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree,
+        shardings,
+    )
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig, *, with_labels: bool):
+    """Abstract input batch for one (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    out = {}
+    if cfg.family == "vlm":
+        p = cfg.frontend_tokens
+        out["tokens"] = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+        out["patches"] = jax.ShapeDtypeStruct((b, p, cfg.frontend_dim), jnp.float32)
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((b, s - p), jnp.int32)
+        return out
+    out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    enc: EncodingConfig = PRODUCTION_ENC,
+    microbatches: int = 1,
+    cfg_overrides: dict | None = None,
+    enc_overrides: dict | None = None,
+):
+    """Returns (lowered, mesh, meta) for one dry-run cell."""
+    import dataclasses
+
+    cfg = registry.get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if enc_overrides:
+        enc = dataclasses.replace(enc, **enc_overrides)
+    shape = registry.get_shape(shape_name)
+    ok, why = registry.cell_is_runnable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    with jax.set_mesh(mesh):
+        params_shape = jax.eval_shape(
+            lambda k: T.model_init(k, cfg, enc), jax.random.PRNGKey(0)
+        )
+        p_sh = sharding.params_shardings(params_shape, mesh)
+        params = _sds(params_shape, p_sh)
+
+        if shape.kind == "train":
+            opt_shape = jax.eval_shape(
+                lambda p: opt_lib.init(p, PRODUCTION_OPT), params_shape
+            )
+            o_sh = sharding.params_shardings(
+                {"mu": params_shape, "nu": params_shape}, mesh
+            )
+            o_sh = {**o_sh, "step": sharding.replicated(mesh)}
+            opt_state = _sds(opt_shape, o_sh)
+            bstruct = batch_struct(cfg, shape, with_labels=True)
+            b_sh = sharding.batch_shardings(bstruct, mesh)
+            batch = _sds(bstruct, b_sh)
+            step_fn = trainer_lib.make_train_step(
+                cfg, enc, PRODUCTION_OPT, microbatches=microbatches
+            )
+            fn = lambda p, o, b: step_fn(p, o, b)[:3]
+            lowered = jax.jit(fn, donate_argnums=(0, 1)).lower(params, opt_state, batch)
+        elif shape.kind == "prefill":
+            caches_shape = jax.eval_shape(
+                lambda: T.cache_init(cfg, shape.global_batch, shape.seq_len)
+            )
+            c_sh = sharding.cache_shardings(caches_shape, mesh)
+            caches = _sds(caches_shape, c_sh)
+            bstruct = batch_struct(cfg, shape, with_labels=False)
+            b_sh = sharding.batch_shardings(bstruct, mesh)
+            batch = _sds(bstruct, b_sh)
+            prefill = engine_lib.make_prefill_step(cfg, enc)
+            extras_keys = [k for k in bstruct if k != "tokens"]
+
+            def fn(p, tokens, caches, extras):
+                return prefill(p, tokens, caches, extras)
+
+            lowered = jax.jit(fn, donate_argnums=(2,)).lower(
+                params,
+                batch["tokens"],
+                caches,
+                {k: batch[k] for k in extras_keys},
+            )
+        else:  # decode
+            caches_shape = jax.eval_shape(
+                lambda: T.cache_init(cfg, shape.global_batch, shape.seq_len)
+            )
+            c_sh = sharding.cache_shardings(caches_shape, mesh)
+            caches = _sds(caches_shape, c_sh)
+            token = jax.ShapeDtypeStruct(
+                (shape.global_batch, 1),
+                jnp.int32,
+                sharding=sharding.batch_shardings(
+                    jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32), mesh
+                ),
+            )
+            pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=sharding.replicated(mesh))
+            decode = engine_lib.make_decode_step(cfg, enc)
+            lowered = jax.jit(decode, donate_argnums=(1,)).lower(params, caches, token, pos)
+
+    meta = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "n_groups": cfg.num_layers // len(cfg.block_pattern),
+    }
+    return lowered, mesh, meta
+
+
+class SkipCell(Exception):
+    pass
+
+
+def run_cell(arch, shape_name, *, multi_pod, save_hlo_dir=None, hlo_suffix="", **kw):
+    t0 = time.time()
+    lowered, mesh, meta = lower_cell(arch, shape_name, multi_pod=multi_pod, **kw)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    cost = compiled.cost_analysis()
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception as e:  # CPU backend may not implement it
+        mem_info = {"error": str(e)}
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+    from benchmarks import hlo_analysis
+
+    hlo = compiled.as_text()
+    # NOTE: XLA's cost_analysis() does not multiply while-loop trip counts
+    # (lax.scan bodies count once), so flops/bytes come from our own HLO
+    # analyzer with loop-multiplier propagation (benchmarks/hlo_analysis.py).
+    a = hlo_analysis.analyze(hlo)
+    if save_hlo_dir:
+        import gzip
+
+        os.makedirs(save_hlo_dir, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{meta['mesh']}{hlo_suffix}".replace("/", "_")
+        with gzip.open(os.path.join(save_hlo_dir, tag + ".hlo.txt.gz"), "wt") as f:
+            f.write(hlo)
+
+    result = {
+        **meta,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": a["flops"],
+        "bytes_per_device": a["hbm_bytes"],
+        "bytes_per_device_unfused": a["hbm_bytes_unfused"],
+        "collective_bytes_per_device": a["collective_bytes"],
+        "collective_ops": a["collective_counts"],
+        "collective_per_op": a["collective_per_op"],
+        "xla_cost_flops_unscaled": float(cost.get("flops", 0.0)),
+        "memory": mem_info,
+    }
+    return result
+
+
+ALL_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--save-hlo", default=None)
+    # Perf levers (§Perf hillclimb variants).
+    ap.add_argument("--expand-kv", action="store_true")
+    ap.add_argument("--pad-heads", type=int, default=0)
+    ap.add_argument("--causal-bands", type=int, default=0)
+    ap.add_argument("--moe-groups", type=int, default=0)
+    ap.add_argument("--moe-shard-map", action="store_true")
+    ap.add_argument("--moe-dense-decode", action="store_true")
+    ap.add_argument("--quant-int8", action="store_true",
+                    help="int8 w8a8 serving weights (decode/prefill cells)")
+    ap.add_argument("--reduce-bf16", action="store_true",
+                    help="bf16 cross-shard matmul reductions")
+    ap.add_argument(
+        "--production", action="store_true",
+        help="all confirmed §Perf levers: expand-kv+pad16, causal-bands 4, "
+             "moe shard_map dispatch, dense-decode MoE",
+    )
+    ap.add_argument("--q-chunk", type=int, default=0)
+    ap.add_argument("--kv-chunk", type=int, default=0)
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    args = ap.parse_args()
+
+    overrides = {}
+    if args.production:
+        overrides.update(
+            tp_attn_expand_kv=True,
+            pad_attn_heads_to=16,
+            causal_bands=4,
+            moe_shard_map=True,
+            moe_dense_decode=True,
+        )
+    if args.expand_kv:
+        overrides["tp_attn_expand_kv"] = True
+    if args.pad_heads:
+        overrides["pad_attn_heads_to"] = args.pad_heads
+    if args.causal_bands:
+        overrides["causal_bands"] = args.causal_bands
+    if args.moe_groups:
+        overrides["moe_dispatch_groups"] = args.moe_groups
+    if args.moe_shard_map:
+        overrides["moe_shard_map"] = True
+    if args.moe_dense_decode:
+        overrides["moe_dense_decode"] = True
+    if args.q_chunk:
+        overrides["q_chunk"] = args.q_chunk
+    if args.kv_chunk:
+        overrides["kv_chunk"] = args.kv_chunk
+    enc_overrides = {}
+    if args.quant_int8:
+        enc_overrides["weight_quant"] = "int8"
+    if args.reduce_bf16:
+        # NOTE kept out of --production: measured ineffective — GSPMD
+        # all-reduces its internal f32 dot accumulator regardless of the
+        # requested einsum output dtype (EXPERIMENTS.md §Perf A/B final
+        # iterations).  A shard_map row-parallel matmul with explicit bf16
+        # psum is the real lever (future work).
+        enc_overrides["reduce_dtype"] = "bfloat16"
+    enc_overrides = enc_overrides or None
+
+    cells = []
+    archs = registry.ASSIGNED_ARCHS if (args.all or not args.arch) else (args.arch,)
+    shapes = ALL_SHAPES if (args.all or not args.shape) else (args.shape,)
+    meshes = (False, True) if args.both_meshes else (args.multi_pod,)
+    for arch in archs:
+        for shp in shapes:
+            for mp in meshes:
+                cells.append((arch, shp, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shp, mp in cells:
+        tag = f"{arch}_{shp}_{'2x16x16' if mp else '16x16'}{args.tag}"
+        out_path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(out_path):
+            print(f"[skip-cached] {tag}")
+            continue
+        try:
+            res = run_cell(
+                arch, shp, multi_pod=mp,
+                microbatches=args.microbatches, save_hlo_dir=args.save_hlo,
+                hlo_suffix=args.tag, cfg_overrides=overrides or None,
+                enc_overrides=enc_overrides,
+            )
+            res["variant"] = args.tag or "baseline"
+            with open(out_path, "w") as f:
+                json.dump(res, f, indent=1)
+            print(
+                f"[ok] {tag}: compile={res['compile_s']}s "
+                f"flops/dev={res['flops_per_device']:.3e} "
+                f"bytes/dev={res['bytes_per_device']:.3e} "
+                f"coll/dev={res['collective_bytes_per_device']:.3e}"
+            )
+        except SkipCell as e:
+            with open(out_path, "w") as f:
+                json.dump({"arch": arch, "shape": shp, "skipped": str(e)}, f)
+            print(f"[skip] {tag}: {e}")
+        except Exception as e:
+            failures += 1
+            print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

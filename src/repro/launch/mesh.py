@@ -1,0 +1,37 @@
+"""Production meshes.  Functions only — importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n: int):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_mesh_for(devices: int, *, model_parallel: int = 1):
+    """Elastic mesh: largest (data, model) grid for the surviving device count.
+
+    Used by runtime/elastic.py when a slice comes back with fewer chips."""
+    model_parallel = max(1, min(model_parallel, devices))
+    while devices % model_parallel:
+        model_parallel -= 1
+    return jax.make_mesh(
+        (devices // model_parallel, model_parallel), ("data", "model"), axis_types=_auto(2)
+    )
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes carrying the batch (DP/FSDP): ('pod','data') on multi-pod."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def model_axes(mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a == "model")

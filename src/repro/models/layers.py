@@ -1,0 +1,585 @@
+"""Shared model layers.  Every dense projection routes through PackedLinear,
+so the paper's encoding applies uniformly across the zoo (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import packed
+from repro.core.encoding import Phase
+from repro.parallel import constraints
+
+# ---------------------------------------------------------------------------
+# Norms
+
+
+def norm_init(cfg: ModelConfig, dim: int | None = None) -> dict:
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def norm_apply(params: dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * params["scale"] + params["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+
+def rope_apply(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D), positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Memory-efficient attention (online softmax over KV chunks)
+
+
+def _chunk_mask(q_pos, k_pos, *, causal: bool, window: int, k_valid):
+    """q_pos: (qc,), k_pos: (kc,) global positions; returns (qc, kc) bool."""
+    m = jnp.broadcast_to(k_valid[None, :], (q_pos.shape[0], k_pos.shape[0]))
+    if causal:
+        m = m & (k_pos[None, :] <= q_pos[:, None])
+    if window > 0:
+        m = m & (k_pos[None, :] > q_pos[:, None] - window)
+    return m
+
+
+def attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: int,
+    q_chunk: int,
+    kv_chunk: int,
+    q_offset: int = 0,
+    expand_kv: bool = False,
+    causal_bands: int = 1,
+    pad_heads_to: int = 0,
+    keep_padded_heads: bool = False,
+) -> jnp.ndarray:
+    """q: (B, Sq, H, D); k, v: (B, Sk, KV, D).  Returns (B, Sq, H, D).
+
+    Flash-style two-level chunking: outer scan over query chunks, inner scan
+    over KV chunks with running (max, denom, acc) — peak live memory is one
+    (q_chunk x kv_chunk) score block per (batch, head), never Sq x Sk.
+
+    Beyond-paper levers (EXPERIMENTS.md §Perf):
+      expand_kv    — repeat KV heads to H so both contractions shard over the
+                     full TP axis when kv_heads < TP degree (GQA).
+      causal_bands — static query bands whose KV scans stop at the band's own
+                     diagonal, skipping always-masked upper-triangle chunks.
+    """
+    b, sq, h, d = q.shape
+    _, sk, kv, _ = k.shape
+    scale = d**-0.5
+
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    nq = -(-sq // qc)
+    nk = -(-sk // kc)
+    q_pad, k_pad = nq * qc - sq, nk * kc - sk
+    if q_pad:
+        q = jnp.pad(q, ((0, 0), (0, q_pad), (0, 0), (0, 0)))
+    if k_pad:
+        k = jnp.pad(k, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, k_pad), (0, 0), (0, 0)))
+
+    h_true = h
+    if expand_kv:
+        if kv != h:
+            k = jnp.repeat(k, h // kv, axis=2)  # kv-major: matches q head order
+            v = jnp.repeat(v, h // kv, axis=2)
+        if pad_heads_to and h % pad_heads_to:
+            hp = h + (-h) % pad_heads_to
+            padw = ((0, 0), (0, 0), (0, hp - h), (0, 0))
+            q = jnp.pad(q, padw)  # zero q -> uniform softmax -> sliced off below
+            k = jnp.pad(k, padw)
+            v = jnp.pad(v, padw)
+            h = hp
+        k = constraints.shard(k, ("data", "pod"), None, "model")
+        v = constraints.shard(v, ("data", "pod"), None, "model")
+        q = constraints.shard(q, ("data", "pod"), None, "model")
+        kv_eff, g = h, 1
+    else:
+        kv_eff, g = kv, h // kv
+
+    qr = q.reshape(b, nq, qc, kv_eff, g, d)
+    kr = k.reshape(b, nk, kc, kv_eff, d)
+    vr = v.reshape(b, nk, kc, kv_eff, d)
+    k_len = sk
+
+    def q_step(qi, nk_lim):
+        qblk = qr[:, qi] * scale  # (B, qc, KV, G, D)
+        q_pos = q_offset + qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, ki):
+            m_run, l_run, acc = carry
+            kblk = kr[:, ki]  # (B, kc, KV, D)
+            vblk = vr[:, ki]
+            k_pos = ki * kc + jnp.arange(kc)
+            s = jnp.einsum(
+                "bqkgd,bckd->bkgqc", qblk, kblk, preferred_element_type=jnp.float32
+            )  # (B, KV, G, qc, kc)
+            mask = _chunk_mask(
+                q_pos, k_pos, causal=causal, window=window, k_valid=k_pos < k_len
+            )
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            # Guard fully-masked rows (no valid keys yet): keep m finite.
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            corr = jnp.where(
+                jnp.isfinite(m_run), jnp.exp(m_run - m_safe), 0.0
+            )
+            l_new = l_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bkgqc,bckd->bkgqd", p, vblk, preferred_element_type=jnp.float32
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv_eff, g, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kv_eff, g, qc), jnp.float32)
+        a0 = jnp.zeros((b, kv_eff, g, qc, d), jnp.float32)
+        (m_f, l_f, acc_f), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk_lim))
+        out = acc_f / jnp.maximum(l_f, 1e-30)[..., None]
+        return out  # (B, KV, G, qc, D)
+
+    bands = causal_bands if (causal and window == 0 and q_offset == 0) else 1
+    bands = max(1, min(bands, nq))
+    if bands == 1:
+        outs = jax.lax.map(lambda qi: q_step(qi, nk), jnp.arange(nq))
+    else:
+        per = -(-nq // bands)
+        pieces = []
+        for bnd in range(bands):
+            lo = bnd * per
+            hi = min(nq, lo + per)
+            if lo >= hi:
+                break
+            # KV chunks visible to the last query row of this band.
+            nk_lim = min(nk, -(-(hi * qc) // kc))
+            pieces.append(
+                jax.lax.map(lambda qi: q_step(qi, nk_lim), jnp.arange(lo, hi))
+            )
+        outs = jnp.concatenate(pieces, axis=0)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, -1, h, d)
+    if keep_padded_heads:
+        return out[:, :sq].astype(q.dtype)  # (B, Sq, h_padded, D)
+    return out[:, :sq, :h_true].astype(q.dtype)
+
+
+def attention_decode(
+    q: jnp.ndarray,
+    k_cache: jnp.ndarray,
+    v_cache: jnp.ndarray,
+    *,
+    pos: jnp.ndarray,
+    window: int,
+) -> jnp.ndarray:
+    """Single-token attention against a (ring-buffered) cache.
+
+    q: (B, 1, H, D); caches: (B, S_c, KV, D); pos: () current position
+    (the new token's index; caller has already written slot pos % S_c).
+    """
+    b, _, h, d = q.shape
+    _, s_c, kvh, _ = k_cache.shape
+    g = h // kvh
+    scale = d**-0.5
+    qg = q.reshape(b, kvh, g, d) * scale
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32)
+    slot = jnp.arange(s_c)
+    if window > 0:
+        # Ring buffer: slots hold positions pos-age; valid while age < window
+        # and the position exists.  age = (pos - slot) mod S_c.
+        age = jnp.mod(pos - slot, s_c)
+        valid = (age < jnp.minimum(pos + 1, window))
+    else:
+        valid = slot <= pos
+    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache, preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention layer (projections + cache plumbing)
+
+
+def attention_init(key, cfg: ModelConfig, enc: packed.EncodingConfig, *, cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kvh = cfg.num_heads, cfg.num_kv_heads
+    dt = cfg.activation_dtype
+    return {
+        "wq": packed.linear_init(ks[0], d, h * hd, enc=enc, use_bias=cfg.qkv_bias, dtype=dt),
+        "wk": packed.linear_init(ks[1], d, kvh * hd, enc=enc, use_bias=cfg.qkv_bias, dtype=dt),
+        "wv": packed.linear_init(ks[2], d, kvh * hd, enc=enc, use_bias=cfg.qkv_bias, dtype=dt),
+        "wo": packed.linear_init(ks[3], h * hd, d, enc=enc, dtype=dt),
+    }
+
+
+def attention_apply(
+    params: dict,
+    x: jnp.ndarray,
+    *,
+    cfg: ModelConfig,
+    enc: packed.EncodingConfig,
+    phase: Phase,
+    cache: dict | None = None,
+    pos: jnp.ndarray | int = 0,
+    kv_src: jnp.ndarray | None = None,
+    causal: bool = True,
+    use_rope: bool = True,
+    window: int | None = None,
+):
+    """Returns (out, new_cache). kv_src != None -> cross attention (no cache write)."""
+    b, s, d = x.shape
+    h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    window = cfg.sliding_window if window is None else window
+
+    q = packed.linear_apply(params["wq"], x, n=h * hd, phase=phase, enc=enc)
+    kv_in = kv_src if kv_src is not None else x
+    k = packed.linear_apply(params["wk"], kv_in, n=kvh * hd, phase=phase, enc=enc)
+    v = packed.linear_apply(params["wv"], kv_in, n=kvh * hd, phase=phase, enc=enc)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, kv_in.shape[1], kvh, hd)
+    v = v.reshape(b, kv_in.shape[1], kvh, hd)
+    if cfg.tp_attn_expand_kv:
+        # SP/TP: query heads over the model axis (divisibility-sanitized).
+        q = constraints.shard(q, ("data", "pod"), None, "model")
+
+    if use_rope and kv_src is None:
+        positions = pos + jnp.arange(s)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+        q = rope_apply(q, positions, cfg.rope_theta)
+        k = rope_apply(k, positions, cfg.rope_theta)
+
+    new_cache = cache
+    if phase is Phase.DECODE and cache is not None and kv_src is None:
+        s_c = cache["k"].shape[1]
+        slot = jnp.mod(pos, s_c) if window > 0 else pos
+        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = attention_decode(q, k_cache, v_cache, pos=pos, window=window)
+    else:
+        # When W_o's packed K-padding already covers the padded head count,
+        # the padded heads flow straight into the (zero) padding rows of W_o —
+        # no slice, no reshard (EXPERIMENTS.md §Perf, qwen iteration 2).
+        keep_pad = False
+        wo_w = params["wo"].get("w_packed", params["wo"].get("w_q"))
+        if cfg.tp_attn_expand_kv and cfg.pad_attn_heads_to and wo_w is not None:
+            hp = h + (-h) % cfg.pad_attn_heads_to
+            k1_cap = wo_w.shape[1] * wo_w.shape[3]
+            keep_pad = hp * hd <= k1_cap
+        # Chunked prefill: attend over previously-cached positions too
+        # (static pos offset; dense cache only — window ring excluded).
+        q_off = 0
+        k_att, v_att = k, v
+        prior = isinstance(pos, int) and pos > 0 and cache is not None
+        if prior and kv_src is None and window == 0:
+            k_att = jnp.concatenate([cache["k"][:, :pos], k], axis=1)
+            v_att = jnp.concatenate([cache["v"][:, :pos], v], axis=1)
+            q_off = pos
+        out = attention_chunked(
+            q, k_att, v_att,
+            causal=causal and kv_src is None,
+            window=window,
+            q_chunk=cfg.q_chunk,
+            kv_chunk=cfg.kv_chunk,
+            q_offset=q_off,
+            expand_kv=cfg.tp_attn_expand_kv,
+            causal_bands=cfg.causal_bands,
+            pad_heads_to=cfg.pad_attn_heads_to,
+            keep_padded_heads=keep_pad,
+        )
+        if cache is not None and kv_src is None:
+            s_c = cache["k"].shape[1]
+            if window > 0 and s >= s_c:
+                new_cache = {"k": k[:, -s_c:], "v": v[:, -s_c:]}
+            else:
+                off = q_off if window == 0 else 0
+                k_cache = jax.lax.dynamic_update_slice(cache["k"], k[:, -s_c:], (0, off, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(cache["v"], v[:, -s_c:], (0, off, 0, 0))
+                new_cache = {"k": k_cache, "v": v_cache}
+
+    out = out.reshape(b, s, out.shape[2] * hd)
+    return packed.linear_apply(params["wo"], out, n=d, phase=phase, enc=enc), new_cache
+
+
+def attn_cache_init(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    s_c = min(max_seq, cfg.sliding_window) if cfg.sliding_window else max_seq
+    dt = cfg.activation_dtype
+    return {
+        "k": jnp.zeros((batch, s_c, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, s_c, cfg.num_kv_heads, cfg.head_dim), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLP
+
+
+def mlp_init(key, cfg: ModelConfig, enc: packed.EncodingConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cfg.activation_dtype
+    if cfg.mlp_kind == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": packed.linear_init(k1, d, f, enc=enc, dtype=dt),
+            "w_up": packed.linear_init(k2, d, f, enc=enc, dtype=dt),
+            "w_down": packed.linear_init(k3, f, d, enc=enc, dtype=dt),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_up": packed.linear_init(k1, d, f, enc=enc, use_bias=True, dtype=dt),
+        "w_down": packed.linear_init(k2, f, d, enc=enc, use_bias=True, dtype=dt),
+    }
+
+
+def mlp_apply(params, x, *, cfg: ModelConfig, enc, phase: Phase) -> jnp.ndarray:
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_kind == "swiglu":
+        gate = packed.linear_apply(params["w_gate"], x, n=f, phase=phase, enc=enc)
+        up = packed.linear_apply(params["w_up"], x, n=f, phase=phase, enc=enc)
+        hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        up = packed.linear_apply(params["w_up"], x, n=f, phase=phase, enc=enc)
+        hidden = jax.nn.gelu(up.astype(jnp.float32)).astype(x.dtype)
+    return packed.linear_apply(params["w_down"], hidden, n=d, phase=phase, enc=enc)
+
+
+# ---------------------------------------------------------------------------
+# MoE (token-choice top-k, capacity-bounded scatter dispatch)
+
+
+def moe_init(key, cfg: ModelConfig, enc: packed.EncodingConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    dt = cfg.activation_dtype
+    kr, kg, ku, kd = jax.random.split(key, 4)
+
+    def stack_init(k, din, dout):
+        keys = jax.random.split(k, e)
+        # Stacked per-expert linear params (works for packed / int8 / plain).
+        return jax.vmap(
+            lambda kk: packed.linear_init(kk, din, dout, enc=enc, dtype=dt)
+        )(keys)
+
+    return {
+        "router": packed.linear_init(kr, d, e, enc=enc, dtype=jnp.float32),
+        "w_gate": stack_init(kg, d, f),   # dict of (E, ...) leaves
+        "w_up": stack_init(ku, d, f),
+        "w_down": stack_init(kd, f, d),
+    }
+
+
+def _expert_matmul(w_stack, x, *, n, phase, enc):
+    """x: (E, ..., D) batched over experts; w_stack: dict of (E, ...) leaves."""
+
+    def one(w, xe):
+        return packed.linear_apply(w, xe, n=n, phase=phase, enc=enc)
+
+    return jax.vmap(one)(w_stack, x)
+
+
+def _dp_axes_and_size():
+    """Ambient-mesh DP axes for shard_map dispatch; (None, 1) when no mesh."""
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:
+        return None, ()
+    if am is None or getattr(am, "empty", True):
+        return None, ()
+    dp = tuple(a for a in ("pod", "data") if a in am.axis_names)
+    return am, dp
+
+
+def moe_apply(params, x, *, cfg: ModelConfig, enc, phase: Phase):
+    """Returns (out, aux_loss). Capacity-bounded token-choice top-k routing.
+
+    Beyond-paper §Perf levers:
+      cfg.moe_dispatch_groups > 1 — group-local ranking/scatter aligned to the
+        DP shards (capacity per group).
+      cfg.moe_shard_map — dispatch/combine under shard_map: shard-local by
+        construction; expert FFNs remain auto-SPMD (TP-sharded weights).
+    """
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    f = cfg.d_ff
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = packed.linear_apply(
+        params["router"], xt, n=e, phase=phase, enc=enc, out_dtype=jnp.float32
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    if cfg.moe_dense_decode and phase is Phase.DECODE:
+        # Dispatch-free decode: every expert sees every live token.
+        xe = jnp.broadcast_to(xt[None], (e, t, d))
+        gate_h = _expert_matmul(params["w_gate"], xe, n=f, phase=phase, enc=enc)
+        up_h = _expert_matmul(params["w_up"], xe, n=f, phase=phase, enc=enc)
+        hidden = jax.nn.silu(gate_h.astype(jnp.float32)).astype(x.dtype) * up_h
+        ys = _expert_matmul(params["w_down"], hidden, n=d, phase=phase, enc=enc)
+        # Combine: per-token gate over its top-k experts, zero elsewhere.
+        wfull = jnp.zeros((t, e), jnp.float32)
+        wfull = wfull.at[jnp.arange(t)[:, None], eidx].set(gate)
+        out = jnp.einsum("etd,te->td", ys.astype(jnp.float32), wfull)
+        onehot = jax.nn.one_hot(eidx, e, dtype=jnp.float32)
+        aux = e * jnp.sum(probs.mean(0) * onehot.sum(1).mean(0))
+        return out.astype(x.dtype).reshape(b, s, d), aux
+
+    if cfg.moe_shard_map:
+        mesh, dp = _dp_axes_and_size()
+        dp_size = 1
+        if mesh is not None and dp:
+            for a in dp:
+                dp_size *= mesh.shape[a]
+        if mesh is not None and dp and dp_size > 1 and t % dp_size == 0:
+            out, aux = _moe_shard_map_apply(
+                params, xt, gate, eidx, probs,
+                cfg=cfg, enc=enc, phase=phase, mesh=mesh, dp=dp, dp_size=dp_size,
+            )
+            return out.reshape(b, s, d), aux
+
+    groups = cfg.moe_dispatch_groups if cfg.moe_dispatch_groups > 1 else 1
+    if t % groups:
+        groups = 1
+    tg = t // groups
+    cap = max(1, int(cfg.capacity_factor * tg * k / e))
+
+    # Position of each (token, slot) in its expert queue; slot-major priority,
+    # group-local rank when groups > 1.
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.float32)  # (T, k, E)
+    oh_g = onehot.reshape(groups, tg, k, e).transpose(0, 2, 1, 3).reshape(
+        groups, k * tg, e
+    )  # slot-major within group
+    pos_flat = (jnp.cumsum(oh_g, axis=1) - oh_g) * oh_g
+    position = (
+        pos_flat.sum(-1).reshape(groups, k, tg).transpose(0, 2, 1).astype(jnp.int32)
+    )  # (G, tg, k)
+    keep = position < cap
+    eidx_g = eidx.reshape(groups, tg, k)
+    gate_g = gate.reshape(groups, tg, k)
+    xt_g = xt.reshape(groups, tg, d)
+
+    # Dispatch: scatter tokens into (G, E, C, D) buffers; groups shard over
+    # the data axes (token-parallel side of the EP layout, DESIGN.md §5).
+    buf = constraints.shard(
+        jnp.zeros((groups, e, cap, d), x.dtype), ("data", "pod")
+    )
+    safe_pos = jnp.where(keep, position, cap - 1)
+    contrib = jnp.where(keep[..., None], 1.0, 0.0).astype(x.dtype)
+    gsel = jnp.arange(groups)[:, None, None]
+    buf = buf.at[gsel, eidx_g, safe_pos].add(
+        xt_g[:, :, None, :] * contrib, mode="drop"
+    )
+    buf = constraints.shard(buf, ("data", "pod"))
+
+    # Expert FFNs (batched over E; group dim folds into the row dim).
+    buf_e = buf.transpose(1, 0, 2, 3)  # (E, G, C, D)
+    gate_h = _expert_matmul(params["w_gate"], buf_e, n=f, phase=phase, enc=enc)
+    up_h = _expert_matmul(params["w_up"], buf_e, n=f, phase=phase, enc=enc)
+    hidden = jax.nn.silu(gate_h.astype(jnp.float32)).astype(x.dtype) * up_h
+    ys = _expert_matmul(params["w_down"], hidden, n=d, phase=phase, enc=enc)
+    ys = constraints.shard(ys, None, ("data", "pod"))  # (E, G, C, D)
+
+    # Combine: gather back and weight.
+    gathered = ys.transpose(1, 0, 2, 3)[gsel, eidx_g, safe_pos]  # (G, tg, k, D)
+    w = (gate_g * keep).astype(jnp.float32)[..., None]
+    out = (gathered.astype(jnp.float32) * w).sum(axis=2).astype(x.dtype)
+
+    # Load-balance aux loss (Switch-style).
+    me = probs.mean(axis=0)
+    ce = onehot.sum(axis=1).mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux
+
+
+def _moe_shard_map_apply(params, xt, gate, eidx, probs, *, cfg, enc, phase,
+                         mesh, dp, dp_size):
+    """shard_map dispatch/combine (see moe_apply docstring)."""
+    from jax.sharding import PartitionSpec as P
+
+    e, k, d, f = cfg.num_experts, cfg.experts_per_token, cfg.d_model, cfg.d_ff
+    t = xt.shape[0]
+    tg = t // dp_size
+    cap = max(1, int(cfg.capacity_factor * tg * k / e))
+
+    def dispatch(xt_s, eidx_s):
+        # All arrays here are one DP shard's slice: (tg, ...).
+        onehot = jax.nn.one_hot(eidx_s, e, dtype=jnp.float32)        # (tg,k,e)
+        flat = onehot.transpose(1, 0, 2).reshape(k * tg, e)          # slot-major
+        pos = ((jnp.cumsum(flat, 0) - flat) * flat).sum(-1)
+        pos = pos.reshape(k, tg).transpose(1, 0).astype(jnp.int32)   # (tg,k)
+        keep = pos < cap
+        safe = jnp.where(keep, pos, cap - 1)
+        contrib = jnp.where(keep[..., None], 1.0, 0.0).astype(xt_s.dtype)
+        buf = jnp.zeros((e, cap, d), xt_s.dtype)
+        buf = buf.at[eidx_s, safe].add(xt_s[:, None, :] * contrib, mode="drop")
+        return buf, safe, keep
+
+    buf, safe_pos, keep = jax.shard_map(
+        dispatch, mesh=mesh,
+        in_specs=(P(dp), P(dp)),
+        out_specs=(P(None, dp), P(dp), P(dp)),
+    )(xt, eidx)
+    # buf: (E, dp_size*cap, D), capacity sharded over the DP axes.
+
+    gate_h = _expert_matmul(params["w_gate"], buf, n=f, phase=phase, enc=enc)
+    up_h = _expert_matmul(params["w_up"], buf, n=f, phase=phase, enc=enc)
+    hidden = jax.nn.silu(gate_h.astype(jnp.float32)).astype(xt.dtype) * up_h
+    ys = _expert_matmul(params["w_down"], hidden, n=d, phase=phase, enc=enc)
+    ys = constraints.shard(ys, None, ("pod", "data"))  # keep capacity on DP
+
+    def combine(ys_s, eidx_s, safe_s, keep_s, gate_s):
+        gathered = ys_s[eidx_s, safe_s]  # (tg, k, d) — local capacity slice
+        w = (gate_s * keep_s).astype(jnp.float32)[..., None]
+        return (gathered.astype(jnp.float32) * w).sum(axis=1).astype(ys_s.dtype)
+
+    out = jax.shard_map(
+        combine, mesh=mesh,
+        in_specs=(P(None, dp), P(dp), P(dp), P(dp), P(dp)),
+        out_specs=P(dp),
+    )(ys, eidx, safe_pos, keep, gate)
+
+    onehot = jax.nn.one_hot(eidx, e, dtype=jnp.float32)
+    me = probs.mean(axis=0)
+    ce = onehot.sum(axis=1).mean(axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out.astype(xt.dtype), aux

@@ -1,0 +1,288 @@
+"""Recurrent token-mixing layers: RWKV-6 (Finch) and RG-LRU (RecurrentGemma).
+
+TPU adaptation notes (DESIGN.md §2): the reference CUDA kernels for both are
+sequential scans.  Here:
+  * RG-LRU uses `jax.lax.associative_scan` (log-depth, parallel over time, the
+    TPU-native formulation of a linear recurrence).
+  * RWKV-6's matrix-valued state uses the chunked linear-attention form:
+    parallel (MXU-friendly) within chunks of 16, sequential lax.scan across
+    chunks.  Decay ratios are computed in log space and the per-step
+    log-decay is clamped to >= -5 so chunk-level cumprod ratios stay in f32
+    range.  Decode is the O(1) recurrence.
+All projections are PackedLinear (the paper's encoding applies here too).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import packed
+from repro.core.encoding import Phase
+from repro.models.layers import norm_apply, norm_init
+
+RWKV_CHUNK = 16
+_LOG_DECAY_FLOOR = -5.0
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 time mix + channel mix
+
+
+def rwkv_init(key, cfg: ModelConfig, enc: packed.EncodingConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 10)
+    lora = max(16, d // 32)
+    return {
+        "ln1": norm_init(cfg),
+        "ln2": norm_init(cfg),
+        "mu": 0.5 * jnp.ones((5, d), jnp.float32),  # r,k,v,g,w token-shift mixes
+        "w0": jnp.zeros((d,), jnp.float32),
+        "w_lora_a": 0.01 * jax.random.normal(ks[0], (d, lora), jnp.float32),
+        "w_lora_b": 0.01 * jax.random.normal(ks[1], (lora, d), jnp.float32),
+        "u": 0.1 * jax.random.normal(ks[2], (h, hd), jnp.float32),  # bonus
+        "wr": packed.linear_init(ks[3], d, d, enc=enc, dtype=dt),
+        "wk": packed.linear_init(ks[4], d, d, enc=enc, dtype=dt),
+        "wv": packed.linear_init(ks[5], d, d, enc=enc, dtype=dt),
+        "wg": packed.linear_init(ks[6], d, d, enc=enc, dtype=dt),
+        "wo": packed.linear_init(ks[7], d, d, enc=enc, dtype=dt),
+        "cm_mu": 0.5 * jnp.ones((2, d), jnp.float32),  # channel-mix r,k
+        "cm_wk": packed.linear_init(ks[8], d, f, enc=enc, dtype=dt),
+        "cm_wv": packed.linear_init(ks[9], f, d, enc=enc, dtype=dt),
+        "cm_wr": packed.linear_init(jax.random.fold_in(ks[9], 1), d, d, enc=enc, dtype=dt),
+    }
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    return {
+        "S": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "shift_tm": jnp.zeros((batch, d), cfg.activation_dtype),
+        "shift_cm": jnp.zeros((batch, d), cfg.activation_dtype),
+    }
+
+
+def _token_shift(x, shift_state):
+    """xs[t] = x[t-1]; xs[0] = shift_state."""
+    prev = jnp.concatenate([shift_state[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def _wkv_chunked(r, k, v, logw, u, state):
+    """Chunked RWKV-6 core.
+
+    r,k,v: (B, S, H, hd); logw: (B, S, H, hd) (<=0, clamped); u: (H, hd);
+    state: (B, H, hd, hd) with S[b,h,i,j] over (k-dim i, v-dim j).
+    Returns (out (B,S,H,hd) f32, new_state).
+    """
+    b, s, h, hd = r.shape
+    c = min(RWKV_CHUNK, s)
+    pad = (-s) % c
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zf(r), zf(k), zf(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (s + pad) // c
+
+    rr = r.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    kk = k.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    vv = v.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4).astype(jnp.float32)
+    lw = logw.reshape(b, nc, c, h, hd).transpose(1, 0, 3, 2, 4)
+    # shapes now (nc, B, H, c, hd)
+
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)  # strict lower
+
+    def chunk_step(S, xs):
+        rc, kc, vc, lwc = xs  # (B, H, c, hd)
+        lam = jnp.cumsum(lwc, axis=2)              # inclusive cumulative log decay
+        lam_prev = lam - lwc                        # exclusive (Λ_{t-1})
+        lam_end = lam[:, :, -1:, :]                 # Λ_c
+        q_t = rc * jnp.exp(lam_prev)                # r_t ⊙ Λ_{t-1}
+        k_t = kc * jnp.exp(-lam)                    # k_i / Λ_i
+        k_end = kc * jnp.exp(lam_end - lam)         # k_i ⊙ Λ_c/Λ_i
+        # Intra-chunk (strictly causal) + diagonal bonus term.
+        a = jnp.einsum("bhtd,bhsd->bhts", q_t, k_t) * tri
+        intra = jnp.einsum("bhts,bhsv->bhtv", a, vc)
+        diag = jnp.einsum("bhtd,bhtd->bht", rc * u[None, :, None, :], kc)
+        intra = intra + diag[..., None] * vc
+        # Inter-chunk: contribution of the carried state.
+        inter = jnp.einsum("bhtd,bhdv->bhtv", q_t, S)
+        # State update.
+        s_new = S * jnp.exp(lam_end[:, :, 0, :])[..., None] + jnp.einsum(
+            "bhsd,bhsv->bhdv", k_end, vc
+        )
+        return s_new, intra + inter
+
+    state_f, outs = jax.lax.scan(chunk_step, state.astype(jnp.float32), (rr, kk, vv, lw))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nc * c, h, hd)
+    return out[:, :s], state_f
+
+
+def rwkv_apply(params, x, *, cfg: ModelConfig, enc, phase: Phase, state: dict | None):
+    """Full RWKV-6 block: x += TM(norm1(x)); x += CM(norm2(x)).
+
+    Token-shift states track the *normed* sub-block inputs, so decode exactly
+    continues a prefill.
+    """
+    b, s, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    if state is None:
+        state = rwkv_state_init(cfg, b)
+
+    # ---- time mix ----
+    xn = norm_apply(params["ln1"], x, cfg)
+    if phase is Phase.DECODE:
+        xs = jnp.broadcast_to(state["shift_tm"][:, None, :].astype(xn.dtype), xn.shape)
+    else:
+        xs = _token_shift(xn, state["shift_tm"].astype(xn.dtype))
+    dx = xs.astype(jnp.float32) - xn.astype(jnp.float32)
+    mu = params["mu"]
+    mix = lambda i: (xn.astype(jnp.float32) + dx * mu[i]).astype(xn.dtype)
+    mr, mk, mv, mg, mw = mix(0), mix(1), mix(2), mix(3), mix(4)
+
+    r = packed.linear_apply(params["wr"], mr, n=d, phase=phase, enc=enc).reshape(b, s, h, hd)
+    k = packed.linear_apply(params["wk"], mk, n=d, phase=phase, enc=enc).reshape(b, s, h, hd)
+    v = packed.linear_apply(params["wv"], mv, n=d, phase=phase, enc=enc).reshape(b, s, h, hd)
+    g = packed.linear_apply(params["wg"], mg, n=d, phase=phase, enc=enc)
+    # Data-dependent decay (THE RWKV-6 feature): w = exp(-exp(w0 + lora(mw))).
+    lora = jnp.tanh(mw.astype(jnp.float32) @ params["w_lora_a"]) @ params["w_lora_b"]
+    log_neg = params["w0"] + lora                     # pre-activation
+    logw = -jnp.exp(jnp.clip(log_neg, -20.0, 1.6))    # log decay, <= 0
+    logw = jnp.maximum(logw, _LOG_DECAY_FLOOR).reshape(b, s, h, hd)
+
+    if phase is Phase.DECODE:
+        rf, kf, vf = (a.astype(jnp.float32) for a in (r, k, v))
+        w1 = jnp.exp(logw[:, 0])                       # (B, H, hd)
+        kv = jnp.einsum("bhd,bhv->bhdv", kf[:, 0], vf[:, 0])
+        out_t = jnp.einsum(
+            "bhd,bhdv->bhv", rf[:, 0], state["S"] + params["u"][None, :, :, None] * kv
+        )
+        s_new = w1[..., None] * state["S"] + kv
+        wkv = out_t[:, None].reshape(b, 1, h, hd)
+        new_S = s_new
+    else:
+        wkv, new_S = _wkv_chunked(r, k, v, logw, params["u"], state["S"])
+        wkv = wkv.reshape(b, s, h, hd)
+
+    wkv = wkv.reshape(b, s, d).astype(x.dtype)
+    wkv = wkv * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    tm_out = packed.linear_apply(params["wo"], wkv, n=d, phase=phase, enc=enc)
+    x = x + tm_out
+
+    # ---- channel mix ----
+    cn = norm_apply(params["ln2"], x, cfg)
+    if phase is Phase.DECODE:
+        cs = jnp.broadcast_to(state["shift_cm"][:, None, :].astype(cn.dtype), cn.shape)
+    else:
+        cs = _token_shift(cn, state["shift_cm"].astype(cn.dtype))
+    dxc = cs.astype(jnp.float32) - cn.astype(jnp.float32)
+    cmu = params["cm_mu"]
+    cr = (cn.astype(jnp.float32) + dxc * cmu[0]).astype(cn.dtype)
+    ck = (cn.astype(jnp.float32) + dxc * cmu[1]).astype(cn.dtype)
+    gate_r = jax.nn.sigmoid(
+        packed.linear_apply(params["cm_wr"], cr, n=d, phase=phase, enc=enc).astype(jnp.float32)
+    )
+    hidden = packed.linear_apply(params["cm_wk"], ck, n=cfg.d_ff, phase=phase, enc=enc)
+    hidden = jnp.square(jax.nn.relu(hidden.astype(jnp.float32))).astype(cn.dtype)
+    down = packed.linear_apply(params["cm_wv"], hidden, n=d, phase=phase, enc=enc)
+    out = x + (gate_r * down.astype(jnp.float32)).astype(x.dtype)
+
+    new_state = {
+        "S": new_S,
+        "shift_tm": xn[:, -1].astype(state["shift_tm"].dtype),
+        "shift_cm": cn[:, -1].astype(state["shift_cm"].dtype),
+    }
+    return out, new_state
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+
+_RGLRU_C = 8.0
+
+
+def rglru_init(key, cfg: ModelConfig, enc: packed.EncodingConfig) -> dict:
+    d = cfg.d_model
+    rw = cfg.rnn_width or d
+    dt = cfg.activation_dtype
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": packed.linear_init(ks[0], d, rw, enc=enc, dtype=dt),
+        "w_gate_branch": packed.linear_init(ks[1], d, rw, enc=enc, dtype=dt),
+        "conv_w": 0.1 * jax.random.normal(ks[2], (cfg.conv_width, rw), jnp.float32),
+        "conv_b": jnp.zeros((rw,), jnp.float32),
+        "w_a": packed.linear_init(ks[3], rw, rw, enc=enc, dtype=dt),
+        "w_x": packed.linear_init(ks[4], rw, rw, enc=enc, dtype=dt),
+        "lam": jnp.log(jnp.expm1(jnp.linspace(0.9, 0.999, rw) ** -0.5)),  # softplus^-1 proxy
+        "w_out": packed.linear_init(ks[5], rw, d, enc=enc, dtype=dt),
+    }
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> dict:
+    rw = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, rw), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, rw), cfg.activation_dtype),
+    }
+
+
+def _causal_conv1d(x, w, b, conv_state):
+    """Depthwise causal conv. x: (B, S, C); w: (W, C); state: (B, W-1, C)."""
+    width = w.shape[0]
+    xx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xx[:, i : i + x.shape[1], :].astype(jnp.float32) * w[i]
+        for i in range(width)
+    ) + b
+    new_state = xx[:, -(width - 1) :, :] if width > 1 else conv_state
+    return out.astype(x.dtype), new_state
+
+
+def rglru_apply(params, x, *, cfg: ModelConfig, enc, phase: Phase, state: dict | None):
+    """Griffin recurrent block: gate branch ⊙ (conv -> RG-LRU) -> out proj."""
+    b, s, d = x.shape
+    rw = cfg.rnn_width or d
+    if state is None:
+        state = rglru_state_init(cfg, b)
+
+    gate = packed.linear_apply(params["w_gate_branch"], x, n=rw, phase=phase, enc=enc)
+    gate = jax.nn.gelu(gate.astype(jnp.float32))
+    xi = packed.linear_apply(params["w_in"], x, n=rw, phase=phase, enc=enc)
+    xi, conv_state = _causal_conv1d(xi, params["conv_w"], params["conv_b"], state["conv"])
+
+    ra = jax.nn.sigmoid(
+        packed.linear_apply(params["w_a"], xi, n=rw, phase=phase, enc=enc).astype(jnp.float32)
+    )
+    ri = jax.nn.sigmoid(
+        packed.linear_apply(params["w_x"], xi, n=rw, phase=phase, enc=enc).astype(jnp.float32)
+    )
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * ra  # (B, S, rw), <= 0
+    a = jnp.exp(log_a)
+    gated_x = ri * xi.astype(jnp.float32)
+    bt = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated_x
+
+    if phase is Phase.DECODE:
+        h = a[:, 0] * state["h"] + bt[:, 0]
+        y = h[:, None, :]
+        new_h = h
+    else:
+        # Parallel linear recurrence: associative scan over time (log-depth).
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        a_cum, b_cum = jax.lax.associative_scan(combine, (a, bt), axis=1)
+        y = b_cum + a_cum * state["h"][:, None, :]
+        new_h = y[:, -1, :]
+
+    y = (y * gate).astype(x.dtype)
+    out = packed.linear_apply(params["w_out"], y, n=d, phase=phase, enc=enc)
+    return out, {"h": new_h, "conv": conv_state}

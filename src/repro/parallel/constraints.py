@@ -1,0 +1,45 @@
+"""Ambient-mesh sharding constraints.
+
+`shard(x, *axes)` applies `with_sharding_constraint` against whatever mesh is
+ambient (jax.set_mesh), sanitizing the spec first: axes not present in the
+mesh, or not dividing their dimension, are dropped.  Outside any mesh context
+it is a no-op, so model code can sprinkle constraints freely and still run in
+plain CPU tests.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _ambient_axis_sizes() -> dict[str, int]:
+    try:
+        am = jax.sharding.get_abstract_mesh()
+    except Exception:  # pragma: no cover - very old jax
+        return {}
+    if am is None or getattr(am, "empty", True):
+        return {}
+    return dict(am.shape)
+
+
+def shard(x, *axes):
+    """axes: one entry per leading dim (None | str | tuple); trailing dims None."""
+    sizes = _ambient_axis_sizes()
+    if not sizes:
+        return x
+    spec = []
+    for dim, a in zip(x.shape, list(axes) + [None] * (x.ndim - len(axes))):
+        if a is None:
+            spec.append(None)
+            continue
+        tup = (a,) if isinstance(a, str) else tuple(a)
+        kept, prod = [], 1
+        for name in tup:
+            if name not in sizes:
+                continue
+            if dim % (prod * sizes[name]) == 0:
+                kept.append(name)
+                prod *= sizes[name]
+        spec.append(tuple(kept) if len(kept) > 1 else (kept[0] if kept else None))
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,80 @@
+"""Pipeline parallelism over the `pod` axis (GPipe schedule).
+
+Stages map 1:1 to pods; stage s holds the s-th slice of the layer stack
+(params sharded over `pod` on their leading dim).  The schedule runs
+M + S - 1 ticks: each tick every stage computes its resident microbatch and
+`ppermute`s activations to the next stage (shard_map makes the transfer an
+explicit neighbour ICI hop — the multi-pod link, which is the point of PP:
+activations cross the pod boundary once per microbatch instead of weights /
+gradients every layer).
+
+Static-shape trick: idle ticks compute garbage that is masked out of the
+output accumulator — standard for SPMD pipelines (bubbles are real, compute
+is constant per tick).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe_forward(stage_fn, stage_params, xs, *, mesh, axis: str = "pod"):
+    """Run `stage_fn(params_slice, x) -> y` through S pipeline stages.
+
+    stage_params: pytree, every leaf (S, ...) — stage dim sharded over `axis`.
+    xs: (M, ...) microbatch stack (replicated over `axis`).
+    Returns (M, ...) outputs of the final stage.
+    """
+    s_stages = mesh.shape[axis]
+    m = xs.shape[0]
+    ticks = m + s_stages - 1
+
+    def local(params_s, xs_local):
+        # params_s leaves: (1, ...); xs_local: (M, ...) [replicated copy]
+        idx = jax.lax.axis_index(axis)
+        p0 = jax.tree.map(lambda a: a[0], params_s)
+
+        def tick(carry, t):
+            acc, cur_in = carry
+            mb = jnp.clip(t, 0, m - 1)
+            inp = jnp.where(idx == 0, xs_local[mb], cur_in)
+            out = stage_fn(p0, inp)
+            # Shift activations one stage forward (ring permute; the wrap
+            # link is unused — its payload is masked at stage 0 next tick).
+            perm = [(i, (i + 1) % s_stages) for i in range(s_stages)]
+            nxt = jax.lax.ppermute(out, axis, perm)
+            slot = jnp.clip(t - (s_stages - 1), 0, m - 1)
+            take = t >= (s_stages - 1)
+            acc = acc.at[slot].set(jnp.where(take, out, acc[slot]))
+            return (acc, nxt), None
+
+        acc0 = jnp.zeros((m,) + xs_local.shape[1:], xs_local.dtype)
+        cur0 = jnp.zeros_like(xs_local[0])
+        # The carry becomes device-varying (depends on axis_index / ppermute):
+        # mark the initial value accordingly for shard_map's vma typing.
+        acc0 = jax.lax.pcast(acc0, (axis,), to="varying")
+        cur0 = jax.lax.pcast(cur0, (axis,), to="varying")
+        (acc, _), _ = jax.lax.scan(tick, (acc0, cur0), jnp.arange(ticks))
+        return acc[None]  # (1, M, ...) per stage
+
+    in_specs = (P(axis), P(*([None] * xs.ndim)))
+    out = jax.shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=P(axis)
+    )(stage_params, xs)
+    # out: (S, M, ...); only the final stage's block carries the result.
+    return out[-1]
+
+
+def stack_stages(layer_params, num_stages: int):
+    """Re-stack a (L, ...) layer pytree into (S, L/S, ...) stage slices."""
+
+    def one(leaf):
+        l = leaf.shape[0]
+        assert l % num_stages == 0, (l, num_stages)
+        return leaf.reshape(num_stages, l // num_stages, *leaf.shape[1:])
+
+    return jax.tree.map(one, layer_params)

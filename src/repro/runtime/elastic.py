@@ -1,0 +1,58 @@
+"""Elastic scaling: rebuild the mesh for the surviving device count and
+reshard training state from the latest checkpoint.
+
+Flow on failure (driver loop in launch/train.py):
+  1. watchdog evicts host(s) / jax reports lost devices,
+  2. `plan(devices)` picks the largest usable (data, model) grid,
+  3. state restores from the last checkpoint with the new shardings
+     (checkpoint leaves are stored unsharded — see checkpoint.py),
+  4. the data pipeline re-keys on the new (host_id, num_hosts),
+  5. training resumes at the checkpointed step: no progress loss beyond the
+     checkpoint interval.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.checkpoint import checkpoint as ckpt_lib
+from repro.launch import mesh as mesh_lib
+from repro.parallel import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    devices: int
+    data: int
+    model: int
+
+    def make_mesh(self):
+        return mesh_lib.make_mesh_for(self.devices, model_parallel=self.model)
+
+
+def plan(devices: int, *, prefer_model_parallel: int = 16) -> ElasticPlan:
+    """Largest (data, model) grid for `devices`, preferring the production TP
+    degree, falling back to smaller powers that divide."""
+    mp = min(prefer_model_parallel, devices)
+    while devices % mp:
+        mp -= 1
+    return ElasticPlan(devices=devices, data=devices // mp, model=mp)
+
+
+def resume(ckpt_dir: str, like_state, new_mesh):
+    """Restore the latest checkpoint resharded onto `new_mesh`."""
+    step = ckpt_lib.latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    sh = {
+        "params": sharding.params_shardings(like_state["params"], new_mesh),
+        "opt": {
+            "mu": sharding.params_shardings(like_state["opt"]["mu"], new_mesh),
+            "nu": sharding.params_shardings(like_state["opt"]["nu"], new_mesh),
+            "step": sharding.replicated(new_mesh),
+        },
+    }
+    state = ckpt_lib.restore(ckpt_dir, step, like_state, shardings=sh)
+    return state, step

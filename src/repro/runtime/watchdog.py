@@ -1,0 +1,90 @@
+"""Straggler detection & mitigation.
+
+Per-step wall times feed an EWMA; a host whose step exceeds
+`threshold x EWMA` is flagged.  Mitigation is pluggable: the trainer installs
+a callback that (a) logs, (b) reassigns the straggler's data shards to healthy
+hosts via `DataReassigner` (the synthetic pipeline is keyed by (host, shard)
+so reassignment is just arithmetic), and (c) after `evict_after` consecutive
+flags, requests an elastic re-mesh (runtime/elastic.py).
+
+Clock is injectable so tests drive it deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+
+@dataclasses.dataclass
+class WatchdogConfig:
+    ewma_alpha: float = 0.2
+    threshold: float = 2.5
+    warmup_steps: int = 5
+    evict_after: int = 3
+
+
+class StepWatchdog:
+    def __init__(self, cfg: WatchdogConfig = WatchdogConfig(), *, clock: Callable[[], float] = time.monotonic):
+        self.cfg = cfg
+        self.clock = clock
+        self.ewma: float | None = None
+        self.steps = 0
+        self._start: float | None = None
+        self.flags: dict[int, int] = {}       # host -> consecutive flags
+        self.evicted: set[int] = set()
+
+    def step_start(self):
+        self._start = self.clock()
+
+    def step_end(self, *, host_times: dict[int, float] | None = None) -> list[int]:
+        """Returns hosts flagged this step.  host_times: per-host durations
+        (from an all-gather of step times in a real deployment; injected in
+        tests).  Without per-host times, only the global EWMA updates."""
+        assert self._start is not None
+        dur = self.clock() - self._start
+        self._start = None
+        self.steps += 1
+        if self.ewma is None:
+            self.ewma = dur
+        else:
+            a = self.cfg.ewma_alpha
+            self.ewma = a * dur + (1 - a) * self.ewma
+
+        flagged = []
+        if host_times and self.steps > self.cfg.warmup_steps:
+            for host, t in host_times.items():
+                if host in self.evicted:
+                    continue
+                if t > self.cfg.threshold * self.ewma:
+                    self.flags[host] = self.flags.get(host, 0) + 1
+                    flagged.append(host)
+                    if self.flags[host] >= self.cfg.evict_after:
+                        self.evicted.add(host)
+                else:
+                    self.flags[host] = 0
+        return flagged
+
+    def should_remesh(self) -> bool:
+        return bool(self.evicted)
+
+
+class DataReassigner:
+    """Maps logical data shards to surviving hosts after eviction."""
+
+    def __init__(self, num_hosts: int):
+        self.num_hosts = num_hosts
+        self.assignment = {h: [h] for h in range(num_hosts)}  # host -> shards
+
+    def evict(self, host: int):
+        if host not in self.assignment:
+            return
+        orphaned = self.assignment.pop(host)
+        survivors = sorted(self.assignment)
+        for i, shard in enumerate(orphaned):
+            target = survivors[i % len(survivors)]
+            self.assignment[target].append(shard)
+
+    def shards_for(self, host: int) -> list[int]:
+        return sorted(self.assignment.get(host, []))

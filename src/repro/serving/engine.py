@@ -1,0 +1,194 @@
+"""Serving: phase-split prefill/decode steps (the paper's two regimes) and a
+continuous-batching engine.
+
+`make_prefill_step` / `make_decode_step` build the jit-able functions the
+dry-run lowers (`serve_step` == one decode token against a seq_len KV cache).
+The `Engine` drives them for real batched requests (examples/serve_llama.py):
+slot-based continuous batching — new requests prefill into free slots while
+existing slots keep decoding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.encoding import Phase
+from repro.core.packed import EncodingConfig
+from repro.models import transformer as T
+
+
+def make_prefill_step(cfg, enc: EncodingConfig) -> Callable:
+    def prefill(params, tokens, caches, extras=None):
+        batch = {"tokens": tokens, **(extras or {})}
+        # Serving prefill only needs the final position's logits (the first
+        # sampled token); (B, S, V) is never materialized.
+        logits, caches, _ = T.forward(
+            params, batch, cfg=cfg, enc=enc, phase=Phase.PREFILL, caches=caches,
+            last_logits_only=True,
+        )
+        return logits, caches
+
+    return prefill
+
+
+def make_chunked_prefill_step(cfg, enc: EncodingConfig, *, chunk: int = 512) -> Callable:
+    """Prefill long prompts in fixed chunks (bounded activation memory, the
+    standard long-prompt serving pattern).  Each chunk runs as a PREFILL with
+    `pos` offset; caches accumulate exactly as a single-shot prefill would.
+
+    Returns prefill_chunked(params, tokens, caches) -> (last_logits, caches).
+    Requires full attention or window <= chunk handling via the dense cache
+    (positions are absolute)."""
+
+    def one_chunk(params, tokens, caches, pos):
+        logits, caches, _ = T.forward(
+            params, {"tokens": tokens}, cfg=cfg, enc=enc, phase=Phase.PREFILL,
+            caches=caches, pos=pos, last_logits_only=True,
+        )
+        return logits, caches
+
+    def prefill_chunked(params, tokens, caches):
+        b, s = tokens.shape
+        logits = None
+        for lo in range(0, s, chunk):
+            hi = min(s, lo + chunk)
+            logits, caches = one_chunk(params, tokens[:, lo:hi], caches, lo)
+        return logits, caches
+
+    return prefill_chunked
+
+
+def make_decode_step(cfg, enc: EncodingConfig, *, sample: str = "greedy") -> Callable:
+    def decode(params, caches, token, pos):
+        """token: (B, 1) int32; pos: () int32 — position of `token`."""
+        logits, caches, _ = T.forward(
+            params,
+            {"tokens": token},
+            cfg=cfg,
+            enc=enc,
+            phase=Phase.DECODE,
+            caches=caches,
+            pos=pos,
+        )
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, caches
+
+    return decode
+
+
+def _batch_axis(path) -> int:
+    """Cache leaves under "groups" carry a leading layer-stack dim: batch is
+    axis 1 there, axis 0 in the tail."""
+    first = path[0]
+    name = getattr(first, "key", getattr(first, "idx", ""))
+    return 1 if str(name) == "groups" else 0
+
+
+def slot_slice(caches, s: int):
+    def one(path, c):
+        ax = _batch_axis(path)
+        return jax.lax.slice_in_dim(c, s, s + 1, axis=ax)
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
+def slot_merge(caches, part, slots_sel: list[int], src_idx: list[int] | None = None):
+    """Write batch rows `src_idx` (default: same as slots_sel) of `part` into
+    rows `slots_sel` of `caches`."""
+    src_idx = src_idx if src_idx is not None else slots_sel
+
+    def one(path, full, p):
+        ax = _batch_axis(path)
+        for dst, src in zip(slots_sel, src_idx):
+            row = jax.lax.slice_in_dim(p, src, src + 1, axis=ax)
+            idx = [slice(None)] * full.ndim
+            idx[ax] = slice(dst, dst + 1)
+            full = full.at[tuple(idx)].set(row)
+        return full
+
+    return jax.tree_util.tree_map_with_path(one, caches, part)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray        # (S,) int32
+    max_new_tokens: int
+    generated: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    """Slot-based continuous batching on a fixed decode batch."""
+
+    def __init__(self, params, cfg, enc: EncodingConfig, *, slots: int = 4, max_seq: int = 256):
+        self.params, self.cfg, self.enc = params, cfg, enc
+        self.slots = slots
+        self.max_seq = max_seq
+        self.prefill_fn = jax.jit(make_prefill_step(cfg, enc))
+        self.decode_fn = jax.jit(make_decode_step(cfg, enc))
+        self.caches = T.cache_init(cfg, slots, max_seq)
+        self.slot_req: list[Request | None] = [None] * slots
+        self.slot_pos = np.zeros(slots, np.int32)
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.pop(0)
+                # Per-slot prefill: batch of 1 through a slot-sliced cache view.
+                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                slot_cache = slot_slice(self.caches, s)
+                _, slot_cache = self.prefill_fn(self.params, toks, slot_cache)
+                self.caches = slot_merge(self.caches, slot_cache, [s], [0])
+                self.slot_req[s] = req
+                self.slot_pos[s] = len(req.prompt)
+
+    def step(self) -> int:
+        """One engine iteration: admit + one decode for every active slot."""
+        self._admit()
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        last_tokens = np.zeros((self.slots, 1), np.int32)
+        for s in active:
+            req = self.slot_req[s]
+            last = req.generated[-1] if req.generated else int(req.prompt[-1])
+            last_tokens[s, 0] = last
+        # Slots admitted with different prompt lengths decode on their own pos
+        # via per-pos grouping; each group's cache rows merge back selectively
+        # so other groups' histories stay untouched.
+        groups: dict[int, list[int]] = {}
+        for s in active:
+            groups.setdefault(int(self.slot_pos[s]), []).append(s)
+        emitted = 0
+        for p, slots in groups.items():
+            nxt, _, new_caches = self.decode_fn(
+                self.params, self.caches, jnp.asarray(last_tokens), jnp.asarray(p - 1, jnp.int32)
+            )
+            self.caches = slot_merge(self.caches, new_caches, slots)
+            for s in slots:
+                req = self.slot_req[s]
+                tok = int(np.asarray(nxt)[s, 0])
+                req.generated.append(tok)
+                self.slot_pos[s] += 1
+                emitted += 1
+                if len(req.generated) >= req.max_new_tokens or self.slot_pos[s] >= self.max_seq:
+                    req.done = True
+                    self.finished.append(req)
+                    self.slot_req[s] = None
+        return emitted
+
+    def run(self) -> list[Request]:
+        while self.queue or any(r is not None for r in self.slot_req):
+            self.step()
+        return self.finished

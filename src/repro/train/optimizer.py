@@ -1,0 +1,99 @@
+"""AdamW with ZeRO-sharded states, global-norm clipping, LR schedule.
+
+Moment tensors are jnp.zeros_like(param) so they inherit each parameter's
+(fully sharded) NamedSharding — ZeRO-1/2 falls out of the FSDP param specs.
+Weight decay applies only to matmul weights (packed or plain); packed-layout
+zero padding stays exactly zero under decoupled decay (grad is zero there and
+decay multiplies zero).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    min_lr: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # f32 moments by default; "bfloat16" halves optimizer HBM (production
+    # profile for the 314B config — see EXPERIMENTS.md §Dry-run fit notes).
+    moment_dtype: str = "float32"
+
+
+def _is_matrix(path) -> bool:
+    last = ""
+    for p in path:
+        if hasattr(p, "key"):
+            last = str(p.key)
+    return last in ("w_packed", "w_t", "embed") or last in (
+        "w_gate", "w_up", "w_down",
+    )
+
+
+def schedule(cfg: OptimizerConfig, step: jnp.ndarray) -> jnp.ndarray:
+    warm = cfg.peak_lr * (step + 1) / max(cfg.warmup_steps, 1)
+    prog = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0
+    )
+    cos = cfg.min_lr + 0.5 * (cfg.peak_lr - cfg.min_lr) * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init(params, cfg: OptimizerConfig | None = None) -> dict:
+    mdt = jnp.dtype(cfg.moment_dtype) if cfg else jnp.float32
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, mdt), p)
+    return {"mu": zeros(params), "nu": zeros(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: OptimizerConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"]
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** (step.astype(jnp.float32) + 1)
+    bc2 = 1 - b2 ** (step.astype(jnp.float32) + 1)
+
+    flat_p, treedef = jax.tree_util.tree_flatten_with_path(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+
+    new_p, new_mu, new_nu = [], [], []
+    for (path, p), g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        g = g.astype(jnp.float32) * scale
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        step_dir = (mu_n / bc1) / (jnp.sqrt(nu_n / bc2) + cfg.eps)
+        wd = cfg.weight_decay if _is_matrix(path) else 0.0
+        upd = p.astype(jnp.float32) - lr * (step_dir + wd * p.astype(jnp.float32))
+        new_p.append(upd.astype(p.dtype))
+        new_mu.append(mu_n.astype(mu.dtype))
+        new_nu.append(nu_n.astype(nu.dtype))
+
+    unflatten = jax.tree_util.tree_unflatten
+    new_state = {
+        "mu": unflatten(treedef, new_mu),
+        "nu": unflatten(treedef, new_nu),
+        "step": step + 1,
+    }
+    return unflatten(treedef, new_p), new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,80 @@
+"""train_step: loss -> grads -> (optional compression) -> AdamW update.
+
+Microbatch gradient accumulation runs as a lax.scan over batch slices so the
+peak activation footprint is one microbatch; XLA overlaps the per-microbatch
+reduce-scatters with the next microbatch's compute (latency-hiding scheduler).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.packed import EncodingConfig
+from repro.models import transformer as T
+from repro.parallel import compression
+from repro.train import optimizer as opt_lib
+
+
+def make_train_step(
+    cfg,
+    enc: EncodingConfig,
+    opt_cfg: opt_lib.OptimizerConfig,
+    *,
+    microbatches: int = 1,
+    compress_grads: bool = False,
+):
+    """Returns train_step(params, opt_state, batch, compress_state) -> ..."""
+
+    def loss_fn(params, batch):
+        return T.loss_fn(params, batch, cfg=cfg, enc=enc)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, compress_state=None):
+        if microbatches > 1:
+            def slice_mb(i, x):
+                mb = x.shape[0] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=0)
+
+            def mb_body(carry, i):
+                acc, loss_acc = carry
+                mb = jax.tree.map(functools.partial(slice_mb, i), batch)
+                loss, _, grads = grads_of(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return (acc, loss_acc + loss), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = jax.lax.scan(
+                mb_body, (zero, jnp.zeros((), jnp.float32)), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            loss = loss_sum / microbatches
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+
+        new_compress_state = compress_state
+        if compress_grads and compress_state is not None:
+            grads, new_compress_state = compression.compress_decompress(
+                grads, compress_state
+            )
+
+        new_params, new_opt, om = opt_lib.apply_updates(params, grads, opt_state, opt_cfg)
+        out_metrics = {"loss": loss, **metrics, **om}
+        return new_params, new_opt, out_metrics, new_compress_state
+
+    return train_step
+
+
+def make_eval_step(cfg, enc: EncodingConfig):
+    def eval_step(params, batch):
+        loss, metrics = T.loss_fn(params, batch, cfg=cfg, enc=enc)
+        return {"loss": loss, **metrics}
+
+    return eval_step

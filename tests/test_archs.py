@@ -1,0 +1,123 @@
+"""Per-assigned-architecture smoke tests (deliverable f): reduced config of
+the same family, one forward + one train step on CPU, asserting output shapes
+and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+from repro.core.encoding import Phase
+from repro.core.packed import EncodingConfig
+from repro.models import transformer as T
+from repro.train import optimizer as opt_lib
+from repro.train import trainer as trainer_lib
+
+ENC = EncodingConfig(enabled=True, backend="xla")
+
+
+def _batch(cfg, b, s, with_labels=True, seed=0):
+    rng = np.random.RandomState(seed)
+    out = {"tokens": jnp.asarray(rng.randint(1, cfg.vocab_size, (b, s)), jnp.int32)}
+    if cfg.family == "encdec":
+        out["frames"] = jnp.asarray(
+            0.1 * rng.randn(b, cfg.frontend_tokens, cfg.d_model), jnp.float32
+        )
+    if cfg.family == "vlm":
+        out["patches"] = jnp.asarray(
+            0.1 * rng.randn(b, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32
+        )
+    if with_labels:
+        out["labels"] = jnp.asarray(rng.randint(1, cfg.vocab_size, (b, s)), jnp.int32)
+    return out
+
+
+@pytest.mark.parametrize("arch", registry.ASSIGNED_ARCHS)
+def test_arch_forward_smoke(arch):
+    cfg = registry.get_reduced(arch)
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    b, s = 2, 16
+    batch = _batch(cfg, b, s, with_labels=False)
+    logits, _, aux = T.forward(params, batch, cfg=cfg, enc=ENC, phase=Phase.PREFILL)
+    expect_s = s + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    assert logits.shape == (b, expect_s, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", registry.ASSIGNED_ARCHS)
+def test_arch_train_step_smoke(arch):
+    cfg = registry.get_reduced(arch)
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    opt_state = opt_lib.init(params)
+    step = trainer_lib.make_train_step(cfg, ENC, opt_lib.OptimizerConfig(peak_lr=1e-3))
+    batch = _batch(cfg, 2, 16)
+    new_params, new_opt, metrics, _ = step(params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    # Parameters actually moved.
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)))),
+        params, new_params,
+    )
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "rwkv6-1.6b", "recurrentgemma-9b", "mixtral-8x22b"])
+def test_arch_decode_smoke(arch):
+    cfg = registry.get_reduced(arch)
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    b, s = 2, 8
+    caches = T.cache_init(cfg, b, max_seq=32)
+    batch = _batch(cfg, b, s, with_labels=False)
+    _, caches, _ = T.forward(params, batch, cfg=cfg, enc=ENC, phase=Phase.PREFILL, caches=caches)
+    tok = jnp.ones((b, 1), jnp.int32)
+    logits, caches, _ = T.forward(
+        params, {"tokens": tok}, cfg=cfg, enc=ENC, phase=Phase.DECODE, caches=caches, pos=s
+    )
+    assert logits.shape == (b, 1, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned hyperparameters (spot checks per arch)."""
+    c = registry.get_config("mixtral-8x22b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.num_experts, c.experts_per_token) == (
+        56, 6144, 48, 8, 16384, 32768, 8, 2)
+    c = registry.get_config("grok-1-314b")
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == (64, 6144, 32768, 131072)
+    c = registry.get_config("qwen2.5-14b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size, c.qkv_bias) == (48, 5120, 40, 8, 13824, 152064, True)
+    c = registry.get_config("qwen2.5-32b")
+    assert (c.num_layers, c.d_ff) == (64, 27648)
+    c = registry.get_config("qwen2-1.5b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (28, 1536, 12, 2, 8960, 151936)
+    c = registry.get_config("yi-9b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (48, 4096, 32, 4, 11008, 64000)
+    c = registry.get_config("whisper-tiny")
+    assert (c.num_layers, c.encoder_layers, c.d_model, c.num_heads, c.d_ff,
+            c.vocab_size) == (4, 4, 384, 6, 1536, 51865)
+    c = registry.get_config("rwkv6-1.6b")
+    assert (c.num_layers, c.d_model, c.d_ff, c.vocab_size) == (24, 2048, 7168, 65536)
+    c = registry.get_config("recurrentgemma-9b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.d_ff, c.vocab_size) == (
+        38, 4096, 16, 12288, 256000)
+    assert c.block_pattern == ("rec", "rec", "attn")
+    c = registry.get_config("internvl2-26b")
+    assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+            c.vocab_size) == (48, 6144, 48, 8, 16384, 92553)
+
+
+def test_long_500k_gating():
+    """long_500k runs exactly for the sub-quadratic archs (DESIGN.md §4)."""
+    runnable = {
+        a for a, s, ok, _ in registry.all_cells() if s == "long_500k" and ok
+    }
+    assert runnable == {"mixtral-8x22b", "rwkv6-1.6b", "recurrentgemma-9b"}
+    assert len(registry.all_cells()) == 40

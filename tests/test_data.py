@@ -1,0 +1,59 @@
+"""Data pipeline: determinism, host-shard disjointness, packing validity."""
+
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+
+from repro.data import pipeline as data_lib
+
+
+def _cfg(**kw):
+    base = dict(vocab_size=512, seq_len=32, global_batch=8, seed=3)
+    base.update(kw)
+    return data_lib.DataConfig(**base)
+
+
+def test_deterministic_across_instances():
+    a = data_lib.SyntheticPacked(_cfg()).batch(5)
+    b = data_lib.SyntheticPacked(_cfg()).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_steps_differ():
+    d = data_lib.SyntheticPacked(_cfg())
+    assert not np.array_equal(d.batch(0)["tokens"], d.batch(1)["tokens"])
+
+
+def test_host_sharding_disjoint_and_covering():
+    """num_hosts shards concatenated == the single-host global batch."""
+    full = data_lib.SyntheticPacked(_cfg()).batch(2)["tokens"]
+    parts = [
+        data_lib.SyntheticPacked(_cfg(), host_id=h, num_hosts=4).batch(2)["tokens"]
+        for h in range(4)
+    ]
+    np.testing.assert_array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_labels_are_shifted_tokens():
+    d = data_lib.SyntheticPacked(_cfg())
+    b = d.batch(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+@hypothesis.given(seed=st.integers(0, 1000), step=st.integers(0, 100))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_tokens_in_vocab_property(seed, step):
+    d = data_lib.SyntheticPacked(_cfg(seed=seed))
+    b = d.batch(step)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < 512
+    assert b["tokens"].shape == (8, 32)
+
+
+def test_prefetcher_preserves_order():
+    d = data_lib.SyntheticPacked(_cfg())
+    pf = data_lib.Prefetcher(d)
+    got = [next(pf)["tokens"] for _ in range(3)]
+    want = [d.batch(i)["tokens"] for i in range(3)]
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(g, w)

@@ -1,0 +1,69 @@
+"""Roofline analyzer: loop-multiplier correctness on controlled programs."""
+
+import sys
+import os
+
+import jax
+import jax.numpy as jnp
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import hlo_analysis as H  # noqa: E402
+
+
+def _hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops_exact():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    hlo = _hlo(lambda a, b: a @ b, x, x)
+    a = H.analyze(hlo)
+    assert a["flops"] == 2 * 256**3
+
+
+def test_scan_multiplies_trip_count():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 128, 128), jnp.float32)
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    a1 = H.analyze(_hlo(lambda a, b: a @ b, x, x))
+    a10 = H.analyze(_hlo(scanned, x, ws))
+    assert abs(a10["flops"] / a1["flops"] - 10.0) < 1e-6
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((4, 64, 64), jnp.float32)
+
+    def nested(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return c2 @ w, None
+            c3, _ = jax.lax.scan(inner, c, jnp.arange(5))
+            return c3, None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    a1 = H.analyze(_hlo(lambda a, b: a @ b, x, x))
+    a20 = H.analyze(_hlo(nested, x, ws))
+    assert abs(a20["flops"] / a1["flops"] - 20.0) < 1e-6
+
+
+def test_bytes_nonzero_and_scale_with_scan():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    ws2 = jax.ShapeDtypeStruct((2, 128, 128), jnp.float32)
+    ws8 = jax.ShapeDtypeStruct((8, 128, 128), jnp.float32)
+
+    def scanned(x, ws):
+        return jax.lax.scan(lambda c, w: (c @ w, None), x, ws)[0]
+
+    b2 = H.analyze(_hlo(scanned, x, ws2))["hbm_bytes"]
+    b8 = H.analyze(_hlo(scanned, x, ws8))["hbm_bytes"]
+    assert b8 > 2.5 * b2  # roughly linear in trip count
+
+
+def test_no_collectives_on_single_device():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    a = H.analyze(_hlo(lambda a: a @ a, x))
+    assert a["collective_bytes"] == 0.0

@@ -1,0 +1,124 @@
+"""Beyond-paper §Perf levers must be numerically exact vs the baseline path
+(they are sharding/scheduling changes, not approximations)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.encoding import Phase
+from repro.core.packed import EncodingConfig
+from repro.models import transformer as T
+from repro.models.layers import attention_chunked
+
+ENC = EncodingConfig(enabled=True, backend="xla")
+
+
+def _logits(cfg, params, toks):
+    l, _, _ = T.forward(params, {"tokens": toks}, cfg=cfg, enc=ENC, phase=Phase.PREFILL)
+    return l
+
+
+def test_expand_kv_pad_bands_model_exact():
+    cfg0 = registry.get_reduced("qwen2.5-14b")
+    cfg0 = dataclasses.replace(cfg0, num_heads=6, num_kv_heads=2)
+    cfg1 = dataclasses.replace(
+        cfg0, tp_attn_expand_kv=True, pad_attn_heads_to=4, causal_bands=3
+    )
+    params = T.model_init(jax.random.PRNGKey(0), cfg0, ENC)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 1, cfg0.vocab_size)
+    np.testing.assert_allclose(
+        np.asarray(_logits(cfg0, params, toks)),
+        np.asarray(_logits(cfg1, params, toks)),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_causal_bands_attention_exact():
+    rng = np.random.RandomState(0)
+    q = jnp.asarray(rng.randn(2, 50, 4, 8), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 50, 2, 8), jnp.float32)
+    v = jnp.asarray(rng.randn(2, 50, 2, 8), jnp.float32)
+    base = attention_chunked(q, k, v, causal=True, window=0, q_chunk=8, kv_chunk=8)
+    for bands in (2, 3, 7):
+        got = attention_chunked(
+            q, k, v, causal=True, window=0, q_chunk=8, kv_chunk=8, causal_bands=bands
+        )
+        np.testing.assert_allclose(np.asarray(base), np.asarray(got), atol=1e-5)
+
+
+def test_dense_decode_matches_dispatch_decode():
+    cfg0 = registry.get_reduced("mixtral-8x22b", capacity_factor=16.0)
+    cfg1 = dataclasses.replace(cfg0, moe_dense_decode=True)
+    params = T.model_init(jax.random.PRNGKey(0), cfg0, ENC)
+    b = 2
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, 9), 1, cfg0.vocab_size)
+    caches0 = T.cache_init(cfg0, b, 16)
+    caches1 = T.cache_init(cfg1, b, 16)
+    _, caches0, _ = T.forward(params, {"tokens": toks[:, :8]}, cfg=cfg0, enc=ENC,
+                              phase=Phase.PREFILL, caches=caches0)
+    _, caches1, _ = T.forward(params, {"tokens": toks[:, :8]}, cfg=cfg1, enc=ENC,
+                              phase=Phase.PREFILL, caches=caches1)
+    l0, _, _ = T.forward(params, {"tokens": toks[:, 8:9]}, cfg=cfg0, enc=ENC,
+                         phase=Phase.DECODE, caches=caches0, pos=8)
+    l1, _, _ = T.forward(params, {"tokens": toks[:, 8:9]}, cfg=cfg1, enc=ENC,
+                         phase=Phase.DECODE, caches=caches1, pos=8)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1), rtol=1e-4, atol=1e-4)
+
+
+def test_grouped_dispatch_no_drop_exact():
+    cfg0 = registry.get_reduced("mixtral-8x22b", capacity_factor=16.0)
+    cfg1 = dataclasses.replace(cfg0, moe_dispatch_groups=4)
+    params = T.model_init(jax.random.PRNGKey(0), cfg0, ENC)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 1, cfg0.vocab_size)
+    np.testing.assert_allclose(
+        np.asarray(_logits(cfg0, params, toks)),
+        np.asarray(_logits(cfg1, params, toks)),
+        rtol=1e-5, atol=1e-5,
+    )
+
+
+def test_moe_shard_map_falls_back_on_cpu():
+    """Without an ambient mesh the shard_map flag must be a no-op."""
+    cfg1 = registry.get_reduced("mixtral-8x22b", capacity_factor=16.0, moe_shard_map=True)
+    cfg0 = dataclasses.replace(cfg1, moe_shard_map=False)
+    params = T.model_init(jax.random.PRNGKey(0), cfg0, ENC)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 1, cfg0.vocab_size)
+    np.testing.assert_allclose(
+        np.asarray(_logits(cfg0, params, toks)),
+        np.asarray(_logits(cfg1, params, toks)),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_last_logits_only():
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1, cfg.vocab_size)
+    full, _, _ = T.forward(params, {"tokens": toks}, cfg=cfg, enc=ENC, phase=Phase.PREFILL)
+    last, _, _ = T.forward(params, {"tokens": toks}, cfg=cfg, enc=ENC,
+                           phase=Phase.PREFILL, last_logits_only=True)
+    assert last.shape == (2, 1, cfg.vocab_size)
+    np.testing.assert_allclose(np.asarray(full[:, -1:]), np.asarray(last), atol=1e-5)
+
+
+def test_bf16_moments_still_train():
+    from repro.data import pipeline as data_lib
+    from repro.train import optimizer as opt_lib, trainer as trainer_lib
+
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    ocfg = opt_lib.OptimizerConfig(peak_lr=3e-3, warmup_steps=2, decay_steps=50,
+                                   moment_dtype="bfloat16")
+    opt_state = opt_lib.init(params, ocfg)
+    assert jax.tree.leaves(opt_state["mu"])[0].dtype == jnp.bfloat16
+    data = data_lib.SyntheticPacked(data_lib.DataConfig(cfg.vocab_size, 32, 8))
+    step = jax.jit(trainer_lib.make_train_step(cfg, ENC, ocfg))
+    losses = []
+    for i in range(15):
+        params, opt_state, m, _ = step(params, opt_state, jax.tree.map(jnp.asarray, data.batch(i)))
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-3:]) < np.mean(losses[:3])

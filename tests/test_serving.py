@@ -1,0 +1,159 @@
+"""Serving invariants: prefill->decode continuity per family, engine
+continuous batching, parity of encoded vs reference model (Table-1 analog)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core.encoding import Phase
+from repro.core.packed import EncodingConfig
+from repro.models import transformer as T
+from repro.serving import engine as engine_lib
+
+ENC = EncodingConfig(enabled=True, backend="xla")
+
+
+def _continuity(arch, tol, **cfg_over):
+    cfg = registry.get_reduced(arch, **cfg_over)
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    b, s = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 1, cfg.vocab_size)
+    full = {"tokens": toks}
+    pfx = 0  # logits offset for multimodal prefixes
+    if cfg.family == "encdec":
+        full["frames"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.frontend_tokens, cfg.d_model)
+        )
+    if cfg.family == "vlm":
+        full["patches"] = 0.1 * jax.random.normal(
+            jax.random.PRNGKey(3), (b, cfg.frontend_tokens, cfg.frontend_dim)
+        )
+        pfx = cfg.frontend_tokens
+    logits_full, _, _ = T.forward(params, full, cfg=cfg, enc=ENC, phase=Phase.PREFILL)
+
+    sp = s - 4
+    caches = T.cache_init(cfg, b, max_seq=s + pfx)
+    part = dict(full)
+    part["tokens"] = toks[:, :sp]
+    logits_p, caches, _ = T.forward(
+        params, part, cfg=cfg, enc=ENC, phase=Phase.PREFILL, caches=caches
+    )
+    errs = [float(jnp.max(jnp.abs(logits_p - logits_full[:, : pfx + sp])))]
+    for i in range(sp, s):
+        logits_d, caches, _ = T.forward(
+            params, {"tokens": toks[:, i : i + 1]},
+            cfg=cfg, enc=ENC, phase=Phase.DECODE, caches=caches, pos=pfx + i,
+        )
+        errs.append(float(jnp.max(jnp.abs(logits_d[:, 0] - logits_full[:, pfx + i]))))
+    assert max(errs) < tol, f"{arch}: prefill/decode diverge: {errs}"
+
+
+@pytest.mark.parametrize("arch,tol", [
+    ("qwen2-1.5b", 1e-4),
+    ("yi-9b", 1e-4),
+    ("rwkv6-1.6b", 1e-4),
+    ("recurrentgemma-9b", 1e-4),
+    ("whisper-tiny", 1e-4),
+    ("internvl2-26b", 1e-4),
+])
+def test_prefill_decode_continuity(arch, tol):
+    _continuity(arch, tol)
+
+
+def test_moe_continuity_with_unbounded_capacity():
+    """Capacity-based token dropping is batch-dependent (expected divergence);
+    with non-binding capacity the MoE path must be exactly continuous too."""
+    _continuity("mixtral-8x22b", 1e-4, capacity_factor=8.0)
+
+
+def test_sliding_window_ring_buffer():
+    """Decode beyond the window: ring-buffer cache == full-cache windowed attn."""
+    cfg = registry.get_reduced("mixtral-8x22b", capacity_factor=8.0, sliding_window=6)
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    b, s = 1, 14
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 1, cfg.vocab_size)
+    logits_full, _, _ = T.forward(
+        params, {"tokens": toks}, cfg=cfg, enc=ENC, phase=Phase.PREFILL
+    )
+    sp = 4  # prefill less than the window, then decode far past it
+    caches = T.cache_init(cfg, b, max_seq=s)
+    _, caches, _ = T.forward(
+        params, {"tokens": toks[:, :sp]}, cfg=cfg, enc=ENC,
+        phase=Phase.PREFILL, caches=caches,
+    )
+    errs = []
+    for i in range(sp, s):
+        logits_d, caches, _ = T.forward(
+            params, {"tokens": toks[:, i : i + 1]},
+            cfg=cfg, enc=ENC, phase=Phase.DECODE, caches=caches, pos=i,
+        )
+        errs.append(float(jnp.max(jnp.abs(logits_d[:, 0] - logits_full[:, i]))))
+    assert max(errs) < 1e-4, errs
+
+
+def test_engine_continuous_batching():
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    eng = engine_lib.Engine(params, cfg, ENC, slots=2, max_seq=48)
+    rng = np.random.RandomState(0)
+    for i in range(5):
+        plen = rng.randint(3, 9)
+        eng.submit(engine_lib.Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, plen).astype(np.int32),
+            max_new_tokens=6,
+        ))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.generated) == 6 for r in done)
+
+
+def test_engine_matches_sequential_decode():
+    """Engine output == naive one-request-at-a-time decode (greedy)."""
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    rng = np.random.RandomState(1)
+    prompts = [rng.randint(1, cfg.vocab_size, rng.randint(3, 7)).astype(np.int32)
+               for _ in range(3)]
+
+    eng = engine_lib.Engine(params, cfg, ENC, slots=2, max_seq=32)
+    for i, p in enumerate(prompts):
+        eng.submit(engine_lib.Request(uid=i, prompt=p, max_new_tokens=5))
+    got = {r.uid: r.generated for r in eng.run()}
+
+    for i, p in enumerate(prompts):
+        caches = T.cache_init(cfg, 1, max_seq=32)
+        logits, caches, _ = T.forward(
+            params, {"tokens": jnp.asarray(p)[None]},
+            cfg=cfg, enc=ENC, phase=Phase.PREFILL, caches=caches,
+        )
+        toks = []
+        last = int(p[-1])
+        pos = len(p) - 1
+        for _ in range(5):
+            logits, caches, _ = T.forward(
+                params, {"tokens": jnp.asarray([[last]], jnp.int32)},
+                cfg=cfg, enc=ENC, phase=Phase.DECODE, caches=caches, pos=pos,
+            )
+            last = int(jnp.argmax(logits[0, -1]))
+            toks.append(last)
+            pos += 1
+        assert got[i] == toks, f"request {i}: {got[i]} vs {toks}"
+
+
+def test_encoded_vs_reference_model_parity():
+    """Table-1 analog at model level: encoding on vs off — same argmax,
+    logits close (f32)."""
+    cfg = registry.get_reduced("llama3.2-1b")
+    enc_on = EncodingConfig(enabled=True, backend="xla")
+    enc_off = EncodingConfig(enabled=False, backend="reference")
+    params_on = T.model_init(jax.random.PRNGKey(0), cfg, enc_on)
+    params_off = T.model_init(jax.random.PRNGKey(0), cfg, enc_off)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1, cfg.vocab_size)
+    lo, _, _ = T.forward(params_on, {"tokens": toks}, cfg=cfg, enc=enc_on, phase=Phase.PREFILL)
+    lr, _, _ = T.forward(params_off, {"tokens": toks}, cfg=cfg, enc=enc_off, phase=Phase.PREFILL)
+    np.testing.assert_allclose(np.asarray(lo), np.asarray(lr), rtol=1e-3, atol=1e-3)
+    assert bool((jnp.argmax(lo, -1) == jnp.argmax(lr, -1)).all())
