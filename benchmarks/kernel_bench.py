@@ -75,6 +75,24 @@ def main():
         rows.append((f"kernel/{tag}/xla_mmt4d_us", t_mmt * 1e6, f"blocks={kb.bm1}x{kb.bn1}x{kb.bk1}"))
         rows.append((f"kernel/{tag}/xla_reference_us", t_ref * 1e6, ""))
         rows.append((f"kernel/{tag}/vmem_bytes", vmem, f"fits={vmem <= targets.TPU_V5E.vmem_bytes // 2}"))
+
+        if phase is Phase.DECODE:
+            # Decode fast path: fused GEMV correctness + the HBM bytes the
+            # in-kernel pack/unpack removes vs the unfused pallas path.
+            got_f = ops.encoded_matmul(
+                x, rhs4, n=n, phase=phase, backend="fused",
+                out_dtype=jnp.float32, interpret=True,
+            )
+            err_f = float(jnp.max(jnp.abs(got_f - want)))
+            hbm = encoding.decode_projection_hbm_bytes(
+                m, n, k, act_itemsize=4, weight_itemsize=4
+            )
+            rows.append((f"kernel/{tag}/fused_gemv_interpret_err", err_f, "allclose"))
+            rows.append((
+                f"kernel/{tag}/fused_gemv_hbm_bytes_saved",
+                hbm["saved"],
+                f"of_{hbm['unfused']}_unfused",
+            ))
     for name, val, derived in rows:
         print(f"{name},{val},{derived}")
     return rows

@@ -2,9 +2,13 @@
 #
 #   table1_parity      — paper Table 1 (accuracy parity HF vs 10x-IREE)
 #   table2_throughput  — paper Table 2 (prefill/decode tokens/s per path)
+#                        + the decode fast-path bench (BENCH_decode.json)
 #   kernel_bench       — per-microkernel correctness + timing (Figs 1-2 analog)
 #   roofline           — §Roofline terms from the dry-run (TPU projection),
 #                        emitted when results/dryrun/ exists.
+#
+# ``--quick``: smoke mode — only the decode fast-path bench, tiny shapes and
+# step counts, finishes in seconds (CI / local sanity).
 
 from __future__ import annotations
 
@@ -16,6 +20,11 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 def main() -> None:
     from benchmarks import ablation_tiles, kernel_bench, table1_parity, table2_throughput
+
+    if "--quick" in sys.argv[1:]:
+        print("name,us_per_call_or_value,derived")
+        table2_throughput.main(quick=True)
+        return
 
     print("name,us_per_call_or_value,derived")
     table1_parity.main()

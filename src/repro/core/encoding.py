@@ -148,6 +148,33 @@ def select_kernel_blocks(
     return KernelBlocks(bm1=bm1, bn1=bn1, bk1=bk1)
 
 
+def decode_projection_hbm_bytes(
+    m: int,
+    n: int,
+    k: int,
+    *,
+    act_itemsize: int = 2,
+    weight_itemsize: int = 2,
+    out_itemsize: int = 4,
+) -> dict[str, int]:
+    """HBM traffic model for ONE decode projection (m live rows, W (n, k)).
+
+    Both paths stream the packed weight once (n*k bytes — the decode roofline
+    term) and read/write the plain activation row and output.  The unfused
+    path additionally materializes the packed activation and packed output in
+    HBM, paying a write+read round-trip for each; the fused GEMV keeps both
+    relayouts inside the kernel (see kernels/fused_gemv.py and docs/PERF.md).
+    """
+    base = n * k * weight_itemsize + m * k * act_itemsize + m * n * out_itemsize
+    pack_rt = 2 * m * k * act_itemsize      # packed-lhs write + read back
+    unpack_rt = 2 * m * n * out_itemsize    # packed-out write + read back
+    return {
+        "unfused": base + pack_rt + unpack_rt,
+        "fused": base,
+        "saved": pack_rt + unpack_rt,
+    }
+
+
 def _round_up(x: int, mult: int) -> int:
     return mult * math.ceil(x / mult) if mult > 0 else x
 

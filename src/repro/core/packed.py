@@ -29,7 +29,9 @@ from repro.kernels import ops
 class EncodingConfig:
     enabled: bool = True
     backend: str = "xla"        # xla | pallas | fused | reference
-    interpret: bool = True      # Pallas interpret mode (CPU container); False on TPU
+    # Pallas interpret mode: None = auto (interpret only when no TPU backend
+    # is present — see targets.resolve_interpret); True/False force it.
+    interpret: bool | None = None
     target: targets_lib.TargetSpec = targets_lib.TPU_V5E
     # Pad packed tile counts to divide the mesh axes (16 in production).
     shard_multiple: int = 1
@@ -102,7 +104,7 @@ def linear_apply(
             params["w_scale"],
             n=n,
             phase=phase,
-            backend=enc.backend if enc.backend in ("pallas",) else "xla",
+            backend=enc.backend if enc.backend in ("pallas", "fused") else "xla",
             out_dtype=out_dtype,
             interpret=enc.interpret,
         )

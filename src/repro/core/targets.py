@@ -11,6 +11,7 @@ published tile sizes.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 
 @dataclasses.dataclass(frozen=True)
@@ -68,3 +69,26 @@ RISCV_VLEN_BITS = 256
 def sublanes_for_dtype(target: TargetSpec, itemsize: int) -> int:
     """TPU packs narrow dtypes into deeper sublane tiles: f32→8, bf16→16, i8→32."""
     return target.sublane_count * max(1, 4 // itemsize)
+
+
+@functools.lru_cache(maxsize=1)
+def has_tpu_backend() -> bool:
+    """True when JAX's default backend is a real TPU (not CPU/interpret host)."""
+    try:
+        import jax
+
+        return jax.default_backend() == "tpu"
+    except Exception:  # no runtime at all — treat as hostile/CPU environment
+        return False
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a Pallas `interpret` request: None = auto-detect.
+
+    Auto mode interprets only when no TPU backend is present, so real-hardware
+    runs never silently fall back to interpreted kernels (and CPU containers
+    never try to compile Mosaic).
+    """
+    if interpret is not None:
+        return bool(interpret)
+    return not has_tpu_backend()

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pl_compat
+
 
 def _batch_mmt4d_kernel(lhs_ref, rhs_ref, out_ref, acc_ref, *, k_steps: int):
     k = pl.program_id(3)
@@ -81,7 +83,7 @@ def batch_mmt4d_pallas(
         ),
         out_shape=jax.ShapeDtypeStruct((bsz, m1, n1, m0, n0), out_dtype),
         scratch_shapes=[pltpu.VMEM((1, bm1, bn1, m0, n0), acc_dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pl_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,147 @@
+"""Pallas TPU microkernel: fused pack + mmt4d-GEMV + unpack (decode fast path).
+
+The decode analogue of `fused_pack_mmt4d.py`.  The unfused decode projection
+(`encoded_matmul` backend="pallas", Phase.DECODE) pays two activation HBM
+round-trips per projection that the weight-streaming GEMV itself never needed:
+
+    ref.pack(x)    : write (M1,K1,M0,K0) + read it back          (2*M*K*s bytes)
+    ref.unpack(out): write (M1,N1,M0,N0) f32 + read it back      (2*M*N*4 bytes)
+
+At decode those transfers are the same order as the activation row itself, and
+the paper's whole decode story (V-Seek; §Roofline here) is that this regime is
+bandwidth-bound — so the pack and unpack move *into* the kernel:
+
+    lhs  : (M, K)   plain 2-D activation rows (M = live decode slots, tiny)
+    rhs4 : (N1, K1, N0, K0)  packed weights, streamed HBM->VMEM exactly once
+    out  : (M, N)   plain 2-D, written in (M, BN1*N0) slabs
+
+The grid walks N only (weight streaming); the full activation row block stays
+resident in VMEM for the whole kernel, exactly like `mmt4d_gemv.py`, and the
+rhs tile relayout ((BN1, K1, N0, K0) -> (K1*K0, BN1*N0)) happens VMEM-locally.
+
+`fused_gemv_q8_pallas` is the w8a8 variant: int8 activation rows + int8 packed
+weights, s32 accumulation, with the factorized-scale epilogue
+(out = acc * s_a[m] * s_w[n]) fused into the same single dispatch — the int8
+path previously paid the identical pack/unpack round-trips plus a separate
+scale multiply over the (M1,N1,M0,N0) tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import pl_compat
+
+
+def _fused_gemv_kernel(lhs_ref, rhs_ref, out_ref):
+    """One grid step: out[:, j-block] = lhs @ relayout(rhs-block)^T (full K)."""
+    bn1, k1, n0, k0 = rhs_ref.shape
+    lhs = lhs_ref[...]  # (M, K1*K0) — implicit "pack": consumed directly.
+    # Weight tile relayout (VMEM-local): (BN1, K1, N0, K0) -> (K1*K0, BN1*N0).
+    rhs = rhs_ref[...].transpose(1, 3, 0, 2).reshape(k1 * k0, bn1 * n0)
+    # Single-shot dot per grid step: no K-revisit, no accumulator scratch.
+    out_ref[...] = jax.lax.dot_general(
+        lhs,
+        rhs,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=out_ref.dtype,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn1", "out_dtype", "interpret"))
+def fused_gemv_pallas(
+    lhs: jnp.ndarray,
+    rhs4: jnp.ndarray,
+    *,
+    bn1: int = 1,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """lhs (M, K) x packed rhs (N1, K1, N0, K0) -> out (M, N1*N0).
+
+    M is the live decode row count (padded by ops.py to a sublane multiple);
+    K must equal K1*K0 (ops.py mirrors the packed K padding).  bn1 = packed N
+    tiles streamed per grid step; must divide N1.
+    """
+    m, k = lhs.shape
+    n1, k1, n0, k0 = rhs4.shape
+    assert k == k1 * k0, (lhs.shape, rhs4.shape)
+    assert n1 % bn1 == 0, (n1, bn1)
+    grid = (n1 // bn1,)
+
+    return pl.pallas_call(
+        _fused_gemv_kernel,
+        grid=grid,
+        in_specs=[
+            # Full activation row block, resident across the whole grid.
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            # Weight stream: each packed block visited exactly once.
+            pl.BlockSpec((bn1, k1, n0, k0), lambda j: (j, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bn1 * n0), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n1 * n0), out_dtype),
+        compiler_params=pl_compat.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="fused_gemv",
+    )(lhs, rhs4)
+
+
+def _fused_gemv_q8_kernel(lhs_ref, rhs_ref, sa_ref, sw_ref, out_ref):
+    bn1, k1, n0, k0 = rhs_ref.shape
+    lhs = lhs_ref[...]  # (M, K1*K0) int8
+    rhs = rhs_ref[...].transpose(1, 3, 0, 2).reshape(k1 * k0, bn1 * n0)
+    acc = jax.lax.dot_general(
+        lhs,
+        rhs,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    # Fused factorized-scale epilogue: out = acc * s_a[m] * s_w[n].
+    sa = sa_ref[...]                      # (M, 1) f32
+    sw = sw_ref[...].reshape(1, bn1 * n0)  # (BN1, N0) -> row vector
+    out_ref[...] = (acc.astype(jnp.float32) * sa * sw).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bn1", "out_dtype", "interpret"))
+def fused_gemv_q8_pallas(
+    lhs_q: jnp.ndarray,   # (M, K) int8 activation rows
+    rhs4_q: jnp.ndarray,  # (N1, K1, N0, K0) int8 packed weights
+    s_a: jnp.ndarray,     # (M, 1) f32 per-row activation scales
+    s_w: jnp.ndarray,     # (N1, N0) f32 per-channel weight scales
+    *,
+    bn1: int = 1,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """w8a8 fused decode GEMV: out (M, N1*N0) = (lhs_q @ rhs_q^T) * s_a * s_w."""
+    m, k = lhs_q.shape
+    n1, k1, n0, k0 = rhs4_q.shape
+    assert k == k1 * k0, (lhs_q.shape, rhs4_q.shape)
+    assert s_a.shape == (m, 1), (s_a.shape, m)
+    assert s_w.shape == (n1, n0), (s_w.shape, rhs4_q.shape)
+    assert n1 % bn1 == 0, (n1, bn1)
+    grid = (n1 // bn1,)
+
+    return pl.pallas_call(
+        _fused_gemv_q8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((bn1, k1, n0, k0), lambda j: (j, 0, 0, 0)),
+            pl.BlockSpec((m, 1), lambda j: (0, 0)),
+            pl.BlockSpec((bn1, n0), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((m, bn1 * n0), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n1 * n0), out_dtype),
+        compiler_params=pl_compat.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+        name="fused_gemv_q8",
+    )(lhs_q, rhs4_q, s_a, s_w)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pl_compat
+
 
 def _mmt4d_gemv_kernel(lhs_ref, rhs_ref, out_ref):
     """One grid step: out[0, b] = sum_k1 lhs[0, k1] @ rhs[b, k1]^T (full K)."""
@@ -68,7 +70,7 @@ def mmt4d_gemv_pallas(
         ],
         out_specs=pl.BlockSpec((1, bn1, m0, n0), lambda j: (0, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, n1, m0, n0), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pl_compat.CompilerParams(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pl_compat
+
 
 def _mmt4d_q8_kernel(lhs_ref, rhs_ref, sa_ref, sw_ref, out_ref, acc_ref, *, k_steps):
     k = pl.program_id(2)
@@ -86,7 +88,7 @@ def mmt4d_q8_pallas(
         out_specs=pl.BlockSpec((bm1, bn1, m0, n0), lambda i, j, k: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((m1, n1, m0, n0), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm1, bn1, m0, n0), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pl_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -15,6 +15,18 @@ prefill and decode.  The paper's phase-specific tile rule (decode N0=VLEN/4)
 is honoured at the *kernel block* level instead: the decode GEMV kernel streams
 `bn1` adjacent N tiles per grid step (bn1*128 ≈ the paper's wide-N), so serving
 does not hold two packed copies of every weight.
+
+The same unification extends to the fused decode fast path: because weights
+stay in the one GEMM-native packed layout, `backend="fused"` can serve BOTH
+regimes from the same rhs4 buffer — prefill routes to the fused GEMM
+(`fused_pack_mmt4d.py`, 128-row slabs) and decode routes to the fused GEMV
+(`fused_gemv.py`, sublane-padded row block, N-only weight-streaming grid).
+Neither path materializes a packed activation or packed output in HBM: the
+pack of the LHS and the unpack of the result live inside the kernel, which at
+decode removes ~2*M*K*s + 2*M*N*4 bytes of HBM traffic per projection — the
+dominant non-weight traffic of the paper's bandwidth-bound decode regime (see
+docs/PERF.md for the full accounting).  The w8a8 path gets the same treatment:
+`fused_gemv_q8_pallas` folds the factorized-scale epilogue into the dispatch.
 """
 
 from __future__ import annotations
@@ -26,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.core import encoding
 from repro.core import targets as targets_lib
+from repro.kernels import fused_gemv as fused_gemv_lib
 from repro.kernels import fused_pack_mmt4d as fused_lib
 from repro.kernels import mmt4d as mmt4d_lib
 from repro.kernels import mmt4d_gemv as gemv_lib
@@ -36,6 +49,11 @@ from repro.kernels import ref
 Phase = encoding.Phase
 
 BACKENDS = ("reference", "xla", "pallas", "fused")
+
+# Row ceiling for the fused decode GEMV: the full (M, K) activation block stays
+# VMEM-resident across the whole grid, so M is bounded by the live decode slots
+# (a few to a few dozen); larger fused matmuls take the 128-row GEMM slab path.
+_FUSED_GEMV_MAX_ROWS = 256
 
 
 def _largest_divisor_leq(n: int, cap: int) -> int:
@@ -103,16 +121,18 @@ def encoded_matmul(
     target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
     out_dtype: Any = None,
     acc_dtype: Any = jnp.float32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """x (..., K) @ W^T where rhs4 is the packed (N1, K1, N0, K0) weight.
 
     Returns (..., n) in `out_dtype` (default: x.dtype). `acc_dtype` is the
     cross-shard reduction dtype (see EncodingConfig.reduce_dtype); in-shard
     MXU accumulation is f32 regardless.  `blocks` overrides the VMEM-model
-    block selection (perf hillclimb knob).
+    block selection (perf hillclimb knob).  `interpret=None` auto-detects:
+    interpreted Pallas only when no TPU backend is present.
     """
     assert backend in BACKENDS, backend
+    interpret = targets_lib.resolve_interpret(interpret)
     out_dtype = out_dtype or x.dtype
     n1, k1, n0, k0 = rhs4.shape
     k = x.shape[-1]
@@ -129,6 +149,35 @@ def encoded_matmul(
         return out.reshape(*lead, n)
 
     if backend == "fused":
+        if phase is Phase.DECODE and m <= _FUSED_GEMV_MAX_ROWS:
+            # Decode fast path: fused GEMV — plain 2-D row block in, packed
+            # weights streamed once, plain 2-D out. Rows pad to one sublane
+            # group (8/16/32 by dtype), not the GEMM's 128-row slab.
+            sub = targets_lib.sublanes_for_dtype(
+                target, jnp.dtype(x.dtype).itemsize
+            )
+            xp = _pad_rows(x2d, sub)
+            want_bn1 = (
+                _gemv_bn1(n0, k0, k1, target, jnp.dtype(rhs4.dtype).itemsize)
+                if blocks is None
+                else blocks[1]
+            )
+            bn1 = _fused_gemv_plan(
+                rows=xp.shape[0],
+                n1=n1, k1=k1, n0=n0, k0=k0,
+                lhs_itemsize=jnp.dtype(x.dtype).itemsize,
+                rhs_itemsize=jnp.dtype(rhs4.dtype).itemsize,
+                want_bn1=want_bn1,
+                target=target,
+            )
+            if bn1 is not None:
+                out2d = fused_gemv_lib.fused_gemv_pallas(
+                    xp, rhs4, bn1=bn1, out_dtype=jnp.float32,
+                    interpret=interpret,
+                )
+                return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
+            # VMEM can't hold the resident row block even at bn1=1:
+            # fall through to the 128-row GEMM slab path below.
         xp = _pad_rows(x2d, 128)
         bm1 = _largest_divisor_leq(xp.shape[0] // 128, 4)
         bn1 = _largest_divisor_leq(n1, 2)
@@ -152,7 +201,11 @@ def encoded_matmul(
         out4 = ref.mmt4d(lhs4, rhs4, acc_dtype=acc_dtype)
     elif phase is Phase.DECODE and m1 == 1:
         # The paper's decode GEMV microkernel: weight-streaming, wide-N blocks.
-        want_bn1 = _gemv_bn1(n0, k0, k1, target) if blocks is None else blocks[1]
+        want_bn1 = (
+            _gemv_bn1(n0, k0, k1, target, jnp.dtype(rhs4.dtype).itemsize)
+            if blocks is None
+            else blocks[1]
+        )
         bn1 = _largest_divisor_leq(n1, want_bn1)
         out4 = gemv_lib.mmt4d_gemv_pallas(lhs4, rhs4, bn1=bn1, interpret=interpret)
     else:
@@ -182,14 +235,53 @@ def encoded_matmul(
     return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
 
 
-def _gemv_bn1(n0: int, k0: int, k1: int, target: targets_lib.TargetSpec) -> int:
+def _fused_gemv_plan(
+    *,
+    rows: int,
+    n1: int,
+    k1: int,
+    n0: int,
+    k0: int,
+    lhs_itemsize: int,
+    rhs_itemsize: int,
+    want_bn1: int,
+    target: targets_lib.TargetSpec,
+) -> int | None:
+    """VMEM-feasible bn1 for the fused GEMV, or None when none fits.
+
+    Unlike the packed GEMV (whose lhs is one sublane-group row block), the
+    fused kernel keeps the full (rows, K) activation block and an
+    (rows, bn1*N0) f32 output slab resident alongside each streamed weight
+    tile — all three must fit the kernel's half-VMEM budget (the other half
+    is double-buffering headroom for the weight stream).
+    """
+    budget = target.vmem_bytes // 2
+    lhs_bytes = rows * k1 * k0 * lhs_itemsize
+    per_tile = k1 * n0 * k0 * rhs_itemsize
+
+    def fits(bn1: int) -> bool:
+        return lhs_bytes + bn1 * per_tile + rows * bn1 * n0 * 4 <= budget
+
+    bn1 = _largest_divisor_leq(n1, max(1, want_bn1))
+    while bn1 > 1 and not fits(bn1):
+        bn1 = _largest_divisor_leq(n1, bn1 - 1)
+    return bn1 if fits(bn1) else None
+
+
+def _gemv_bn1(
+    n0: int,
+    k0: int,
+    k1: int,
+    target: targets_lib.TargetSpec,
+    rhs_itemsize: int = 2,
+) -> int:
     """Decode streaming width: the paper's wide-N rule, VMEM-budgeted.
 
     select_tile_sizes(DECODE).n0 (=512 lanes on TPU) sets the *minimum* stream
     width; the ceiling is half of VMEM for the per-step weight block.
     """
     want = encoding.select_tile_sizes(Phase.DECODE, target=target).n0 // n0
-    per_tile = k1 * n0 * k0 * 2  # bf16 weights
+    per_tile = k1 * n0 * k0 * rhs_itemsize
     cap = max(1, (target.vmem_bytes // 2) // max(per_tile, 1))
     return max(1, min(max(want, 1), cap))
 
@@ -217,10 +309,15 @@ def encoded_matmul_q8(
     phase: Phase,
     backend: str = "xla",
     out_dtype: Any = None,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     """w8a8 encoded matmul: dynamic per-row activation quant, packed int8
-    weights, s32 accumulation, factorized scales (see kernels/mmt4d_q8.py)."""
+    weights, s32 accumulation, factorized scales (see kernels/mmt4d_q8.py).
+
+    backend="fused" at decode skips the activation pack and the output unpack
+    entirely: quantized rows feed `fused_gemv_q8_pallas`, whose epilogue also
+    folds in the s_a*s_w scale product (one dispatch, no HBM round-trips)."""
+    interpret = targets_lib.resolve_interpret(interpret)
     out_dtype = out_dtype or x.dtype
     n1, k1, n0, k0 = rhs4_q.shape
     k = x.shape[-1]
@@ -231,6 +328,24 @@ def encoded_matmul_q8(
         x2d = jnp.pad(x2d, ((0, 0), (0, k1 * k0 - k)))
     xq, s_a = ref.quantize_rows(x2d)
 
+    if backend == "fused" and phase is Phase.DECODE and m <= _FUSED_GEMV_MAX_ROWS:
+        sub = targets_lib.sublanes_for_dtype(targets_lib.TPU_V5E, 1)
+        xqp = _pad_rows(xq, sub)
+        rows = xqp.shape[0]
+        bn1 = _fused_gemv_plan(
+            rows=rows, n1=n1, k1=k1, n0=n0, k0=k0,
+            lhs_itemsize=1, rhs_itemsize=1,
+            want_bn1=_gemv_bn1(n0, k0, k1, targets_lib.TPU_V5E, 1),
+            target=targets_lib.TPU_V5E,
+        )
+        if bn1 is not None:
+            sa2 = jnp.zeros((rows, 1), jnp.float32).at[:m, 0].set(s_a)
+            out2d = fused_gemv_lib.fused_gemv_q8_pallas(
+                xqp, rhs4_q, sa2, s_w, bn1=bn1, interpret=interpret
+            )
+            return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
+        # No VMEM-feasible fused plan: fall through to the packed q8 path.
+
     m0 = _select_m0(phase, jnp.int8, m, targets_lib.TPU_V5E)
     xq = _pad_rows(xq, m0)
     m1 = xq.shape[0] // m0
@@ -238,7 +353,9 @@ def encoded_matmul_q8(
     sa_pad = jnp.zeros((m1 * m0,), jnp.float32).at[:m].set(s_a)
     sa2 = sa_pad.reshape(m1, m0)
 
-    if backend == "pallas":
+    if backend in ("pallas", "fused"):
+        # "fused" outside the GEMV regime (prefill, big M, VMEM-infeasible)
+        # still runs the packed Pallas q8 kernel, not the reference einsum.
         bm1 = _largest_divisor_leq(m1, 4)
         bn1 = _largest_divisor_leq(n1, 4)
         bk1 = _largest_divisor_leq(k1, 4)
@@ -257,6 +374,8 @@ unpack_pallas = pack_lib.unpack_pallas
 mmt4d_pallas = mmt4d_lib.mmt4d_pallas
 mmt4d_gemv_pallas = gemv_lib.mmt4d_gemv_pallas
 fused_pack_mmt4d_pallas = fused_lib.fused_pack_mmt4d_pallas
+fused_gemv_pallas = fused_gemv_lib.fused_gemv_pallas
+fused_gemv_q8_pallas = fused_gemv_lib.fused_gemv_q8_pallas
 
 
 @functools.lru_cache(maxsize=None)

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import pl_compat
+
 
 def _pack_kernel(x_ref, out_ref):
     br1, bc1, t0, t1 = out_ref.shape
@@ -53,7 +55,7 @@ def pack_pallas(
         in_specs=[pl.BlockSpec((br1 * t0, bc1 * t1), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((br1, bc1, t0, t1), lambda i, j: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((r1, c1, t0, t1), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pl_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -79,7 +81,7 @@ def unpack_pallas(
         in_specs=[pl.BlockSpec((br1, bc1, t0, t1), lambda i, j: (i, j, 0, 0))],
         out_specs=pl.BlockSpec((br1 * t0, bc1 * t1), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((r1 * t0, c1 * t1), x4.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=pl_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,0 +1,13 @@
+"""Pallas API compatibility: `pltpu.CompilerParams` was `TPUCompilerParams`
+in older jax releases (<= 0.4.x).  Every kernel module takes the class from
+here so the whole package tracks whichever name the installed jax provides.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+assert CompilerParams is not None, "no Pallas TPU CompilerParams class found"

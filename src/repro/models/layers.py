@@ -211,8 +211,10 @@ def attention_decode(
 ) -> jnp.ndarray:
     """Single-token attention against a (ring-buffered) cache.
 
-    q: (B, 1, H, D); caches: (B, S_c, KV, D); pos: () current position
-    (the new token's index; caller has already written slot pos % S_c).
+    q: (B, 1, H, D); caches: (B, S_c, KV, D); pos: () shared position, or (B,)
+    per-row positions (position-vectorized decode: every batch row attends
+    its own history length; the new token's index — caller has already written
+    slot pos % S_c).
     """
     b, _, h, d = q.shape
     _, s_c, kvh, _ = k_cache.shape
@@ -221,14 +223,18 @@ def attention_decode(
     qg = q.reshape(b, kvh, g, d) * scale
     s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32)
     slot = jnp.arange(s_c)
+    pos = jnp.asarray(pos)
+    posb = pos[:, None] if pos.ndim == 1 else pos  # (B, 1) | ()
     if window > 0:
         # Ring buffer: slots hold positions pos-age; valid while age < window
         # and the position exists.  age = (pos - slot) mod S_c.
-        age = jnp.mod(pos - slot, s_c)
-        valid = (age < jnp.minimum(pos + 1, window))
+        age = jnp.mod(posb - slot, s_c)
+        valid = (age < jnp.minimum(posb + 1, window))
     else:
-        valid = slot <= pos
-    s = jnp.where(valid[None, None, None], s, -jnp.inf)
+        valid = slot <= posb
+    # valid: (S_c,) shared-pos, (B, S_c) vectorized.
+    vmask = valid[:, None, None, :] if valid.ndim == 2 else valid[None, None, None]
+    s = jnp.where(vmask, s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache, preferred_element_type=jnp.float32)
     return out.reshape(b, 1, h, d).astype(q.dtype)
@@ -265,10 +271,16 @@ def attention_apply(
     use_rope: bool = True,
     window: int | None = None,
 ):
-    """Returns (out, new_cache). kv_src != None -> cross attention (no cache write)."""
+    """Returns (out, new_cache). kv_src != None -> cross attention (no cache write).
+
+    `pos` may be a scalar (all rows share a position — prefill offset or
+    uniform decode) or a (B,) vector (position-vectorized decode: each batch
+    row carries its own position; DECODE with S == 1 only).
+    """
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     window = cfg.sliding_window if window is None else window
+    pos_vec = jnp.asarray(pos).ndim == 1  # per-row positions
 
     q = packed.linear_apply(params["wq"], x, n=h * hd, phase=phase, enc=enc)
     kv_in = kv_src if kv_src is not None else x
@@ -282,17 +294,26 @@ def attention_apply(
         q = constraints.shard(q, ("data", "pod"), None, "model")
 
     if use_rope and kv_src is None:
-        positions = pos + jnp.arange(s)[None, :]
-        positions = jnp.broadcast_to(positions, (b, s))
+        if pos_vec:
+            positions = jnp.asarray(pos)[:, None] + jnp.arange(s)[None, :]
+        else:
+            positions = pos + jnp.arange(s)[None, :]
+            positions = jnp.broadcast_to(positions, (b, s))
         q = rope_apply(q, positions, cfg.rope_theta)
         k = rope_apply(k, positions, cfg.rope_theta)
 
     new_cache = cache
     if phase is Phase.DECODE and cache is not None and kv_src is None:
         s_c = cache["k"].shape[1]
-        slot = jnp.mod(pos, s_c) if window > 0 else pos
-        k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        slot = jnp.mod(jnp.asarray(pos), s_c) if window > 0 else jnp.asarray(pos)
+        if pos_vec:
+            # Per-row scatter: row i writes its own cache slot (one token).
+            bidx = jnp.arange(b)
+            k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+            v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        else:
+            k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
         new_cache = {"k": k_cache, "v": v_cache}
         out = attention_decode(q, k_cache, v_cache, pos=pos, window=window)
     else:

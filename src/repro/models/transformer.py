@@ -141,8 +141,11 @@ def forward(
 
     batch: {"tokens": (B, S)} (+ "frames" (B,T,D) for audio, "patches"
     (B,P,Dv) for vision).  For decode, S == 1 and `pos` is the position of the
-    incoming token.  last_logits_only: emit logits for the final position only
-    (serving prefill — avoids materializing the (B, S, V) tensor).
+    incoming token — either a scalar shared by every row, or a (B,) vector of
+    per-row positions (position-vectorized decode: one dispatch serves batch
+    rows at different sequence depths; serving/engine.py).  last_logits_only:
+    emit logits for the final position only (serving prefill — avoids
+    materializing the (B, S, V) tensor).
     """
     tokens = batch["tokens"]
     b, s = tokens.shape
@@ -154,8 +157,13 @@ def forward(
     if cfg.family == "encdec":
         if phase is not Phase.DECODE:
             extra = _run_encoder(params, batch["frames"], cfg, enc, phase)
-        posn = pos + jnp.arange(s)  # pos > 0 for decode and chunked prefill
-        x = x + params["dec_pos_embed"][posn][None]
+        # pos > 0 for decode and chunked prefill; (B,) pos for vectorized decode.
+        if jnp.asarray(pos).ndim == 1:
+            posn = jnp.asarray(pos)[:, None] + jnp.arange(s)[None, :]
+            x = x + params["dec_pos_embed"][posn]
+        else:
+            posn = pos + jnp.arange(s)
+            x = x + params["dec_pos_embed"][posn][None]
     elif cfg.family == "vlm" and phase is not Phase.DECODE:
         pj = params["projector"]
         pimg = L.norm_apply(pj["ln"], batch["patches"].astype(dt), cfg)

@@ -6,10 +6,20 @@ dry-run lowers (`serve_step` == one decode token against a seq_len KV cache).
 The `Engine` drives them for real batched requests (examples/serve_llama.py):
 slot-based continuous batching — new requests prefill into free slots while
 existing slots keep decoding.
+
+Decode fast path (decode_mode="vectorized", the default): every active slot
+decodes in ONE jitted call per engine step regardless of prompt-length skew —
+`pos` is a per-slot vector threaded through the model's cache indexing, the
+step donates the cache buffers (in-place update, no copy), and the returned
+caches replace the engine's wholesale (no per-slot merge scatter).  The
+pre-existing per-position-group dispatch loop is kept as
+decode_mode="grouped" — it is the baseline the vectorized path is benchmarked
+against (benchmarks/table2_throughput.py, BENCH_decode.json).
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any, Callable
 
@@ -65,7 +75,8 @@ def make_chunked_prefill_step(cfg, enc: EncodingConfig, *, chunk: int = 512) -> 
 
 def make_decode_step(cfg, enc: EncodingConfig, *, sample: str = "greedy") -> Callable:
     def decode(params, caches, token, pos):
-        """token: (B, 1) int32; pos: () int32 — position of `token`."""
+        """token: (B, 1) int32; pos: () or (B,) int32 — position of `token`
+        (per-row when vectorized over slot positions)."""
         logits, caches, _ = T.forward(
             params,
             {"tokens": token},
@@ -89,29 +100,47 @@ def _batch_axis(path) -> int:
     return 1 if str(name) == "groups" else 0
 
 
-def slot_slice(caches, s: int):
+def slot_gather(caches, slots_sel: list[int]):
+    """Batch rows `slots_sel` of every cache leaf, as one gather per leaf."""
+    idx = jnp.asarray(slots_sel, jnp.int32)
+
     def one(path, c):
-        ax = _batch_axis(path)
-        return jax.lax.slice_in_dim(c, s, s + 1, axis=ax)
+        return jnp.take(c, idx, axis=_batch_axis(path))
 
     return jax.tree_util.tree_map_with_path(one, caches)
 
 
+def slot_slice(caches, s: int):
+    return slot_gather(caches, [s])
+
+
 def slot_merge(caches, part, slots_sel: list[int], src_idx: list[int] | None = None):
     """Write batch rows `src_idx` (default: same as slots_sel) of `part` into
-    rows `slots_sel` of `caches`."""
-    src_idx = src_idx if src_idx is not None else slots_sel
+    rows `slots_sel` of `caches` — one gather + one scatter per leaf (the
+    per-slot .at[].set loop scaled O(slots) dispatches per leaf)."""
+    src = jnp.asarray(src_idx if src_idx is not None else slots_sel, jnp.int32)
+    dst = jnp.asarray(slots_sel, jnp.int32)
 
     def one(path, full, p):
         ax = _batch_axis(path)
-        for dst, src in zip(slots_sel, src_idx):
-            row = jax.lax.slice_in_dim(p, src, src + 1, axis=ax)
-            idx = [slice(None)] * full.ndim
-            idx[ax] = slice(dst, dst + 1)
-            full = full.at[tuple(idx)].set(row)
-        return full
+        rows = jnp.take(p, src, axis=ax)
+        if ax == 0:
+            return full.at[dst].set(rows)
+        return full.at[:, dst].set(rows)
 
     return jax.tree_util.tree_map_with_path(one, caches, part)
+
+
+def count_calls(fn):
+    """Wrap `fn` with a dispatch counter (`fn.calls`) — instrumentation for
+    the decode-dispatch invariants (benchmarks and tests)."""
+
+    def wrapped(*args, **kwargs):
+        wrapped.calls += 1
+        return fn(*args, **kwargs)
+
+    wrapped.calls = 0
+    return wrapped
 
 
 @dataclasses.dataclass
@@ -124,34 +153,121 @@ class Request:
 
 
 class Engine:
-    """Slot-based continuous batching on a fixed decode batch."""
+    """Slot-based continuous batching on a fixed decode batch.
 
-    def __init__(self, params, cfg, enc: EncodingConfig, *, slots: int = 4, max_seq: int = 256):
+    decode_mode:
+      "vectorized" (default) — one jitted decode per step for ALL active slots:
+        per-slot `pos` vector through the model, donated cache buffers, caches
+        replaced wholesale (inactive rows absorb masked-off writes that the
+        next admission's prefill overwrites).
+      "grouped" — the per-position-group dispatch loop with selective
+        slot_merge; kept as the benchmark baseline.
+
+    batch_prefill: admit every queued request that fits in one right-padded
+    prefill call (attention-only, full-attention models; recurrent state and
+    ring-buffer caches would absorb the pad garbage, so those families keep
+    the exact per-slot prefill).
+    """
+
+    def __init__(
+        self,
+        params,
+        cfg,
+        enc: EncodingConfig,
+        *,
+        slots: int = 4,
+        max_seq: int = 256,
+        decode_mode: str = "vectorized",
+        batch_prefill: bool = True,
+    ):
+        assert decode_mode in ("vectorized", "grouped"), decode_mode
         self.params, self.cfg, self.enc = params, cfg, enc
         self.slots = slots
         self.max_seq = max_seq
+        # Vectorized decode is only sound for attention KV caches, where an
+        # inactive row's write lands at a masked position.  Recurrent state
+        # (rec/rwkv) has no position mask — an idle row's state would absorb a
+        # token-0 update every step and later admissions prefill FROM that
+        # state — so those families keep the grouped path.
+        if decode_mode == "vectorized" and not all(
+            t == "attn" for t in cfg.block_pattern
+        ):
+            decode_mode = "grouped"
+        self.decode_mode = decode_mode
         self.prefill_fn = jax.jit(make_prefill_step(cfg, enc))
-        self.decode_fn = jax.jit(make_decode_step(cfg, enc))
+        # Vectorized mode replaces the caches wholesale each step, so the old
+        # buffers can be donated (in-place update on device, no copy).  The
+        # grouped path re-reads self.caches after the call (merge) — no donate.
+        donate = (1,) if decode_mode == "vectorized" else ()
+        self.decode_fn = jax.jit(make_decode_step(cfg, enc), donate_argnums=donate)
         self.caches = T.cache_init(cfg, slots, max_seq)
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+        self.batch_prefill = (
+            batch_prefill
+            and all(t == "attn" for t in cfg.block_pattern)
+            and cfg.sliding_window == 0
+        )
 
     def submit(self, req: Request):
         self.queue.append(req)
 
     def _admit(self):
-        for s in range(self.slots):
-            if self.slot_req[s] is None and self.queue:
-                req = self.queue.pop(0)
+        free = [s for s in range(self.slots) if self.slot_req[s] is None]
+        batch: list[tuple[int, Request]] = []
+        while free and self.queue:
+            req = self.queue.popleft()
+            if req.max_new_tokens <= 0:
+                # Degenerate request: nothing to decode — never occupies a slot.
+                req.done = True
+                self.finished.append(req)
+                continue
+            batch.append((free.pop(0), req))
+        if not batch:
+            return
+        if self.batch_prefill and len(batch) > 1:
+            # One right-padded prefill for every admitted request.  Pad tokens
+            # only write cache positions the decode mask (slot <= pos) never
+            # reads before a real token overwrites them.  The pad length
+            # rounds up to a power of two so the jitted prefill compiles for
+            # O(slots * log(max_seq)) shapes, not one per distinct maxlen.
+            slots_sel = [s for s, _ in batch]
+            maxlen = max(len(r.prompt) for _, r in batch)
+            maxlen = min(1 << (maxlen - 1).bit_length(), self.max_seq)
+            toks = np.zeros((len(batch), maxlen), np.int32)
+            for i, (_, r) in enumerate(batch):
+                toks[i, : len(r.prompt)] = r.prompt
+            part = slot_gather(self.caches, slots_sel)
+            _, part = self.prefill_fn(self.params, jnp.asarray(toks), part)
+            self.caches = slot_merge(
+                self.caches, part, slots_sel, list(range(len(batch)))
+            )
+        else:
+            for s, r in batch:
                 # Per-slot prefill: batch of 1 through a slot-sliced cache view.
-                toks = jnp.asarray(req.prompt, jnp.int32)[None]
+                toks = jnp.asarray(r.prompt, jnp.int32)[None]
                 slot_cache = slot_slice(self.caches, s)
                 _, slot_cache = self.prefill_fn(self.params, toks, slot_cache)
                 self.caches = slot_merge(self.caches, slot_cache, [s], [0])
-                self.slot_req[s] = req
-                self.slot_pos[s] = len(req.prompt)
+        for s, r in batch:
+            self.slot_req[s] = r
+            self.slot_pos[s] = len(r.prompt)
+
+    def _commit(self, slots_sel: list[int], nxt: np.ndarray) -> int:
+        emitted = 0
+        for s in slots_sel:
+            req = self.slot_req[s]
+            req.generated.append(int(nxt[s, 0]))
+            self.slot_pos[s] += 1
+            emitted += 1
+            if len(req.generated) >= req.max_new_tokens or self.slot_pos[s] >= self.max_seq:
+                req.done = True
+                self.finished.append(req)
+                self.slot_req[s] = None
+                self.slot_pos[s] = 0  # freed rows decode (discarded) at pos 0
+        return emitted
 
     def step(self) -> int:
         """One engine iteration: admit + one decode for every active slot."""
@@ -164,9 +280,20 @@ class Engine:
             req = self.slot_req[s]
             last = req.generated[-1] if req.generated else int(req.prompt[-1])
             last_tokens[s, 0] = last
-        # Slots admitted with different prompt lengths decode on their own pos
-        # via per-pos grouping; each group's cache rows merge back selectively
-        # so other groups' histories stay untouched.
+        if self.decode_mode == "vectorized":
+            # One dispatch serves all active slots regardless of position skew:
+            # each row decodes at its own pos.  Inactive rows decode (and write
+            # their cache row at pos 0) with token 0; that write is harmless
+            # because every cache position is written before it is attended —
+            # the next admission's prefill rewrites the row from position 0 up.
+            pos_vec = np.maximum(self.slot_pos.astype(np.int32) - 1, 0)
+            nxt, _, self.caches = self.decode_fn(
+                self.params, self.caches, jnp.asarray(last_tokens), jnp.asarray(pos_vec)
+            )
+            return self._commit(active, np.asarray(nxt))
+        # Grouped baseline: slots admitted with different prompt lengths decode
+        # on their own pos via per-pos grouping; each group's cache rows merge
+        # back selectively so other groups' histories stay untouched.
         groups: dict[int, list[int]] = {}
         for s in active:
             groups.setdefault(int(self.slot_pos[s]), []).append(s)
@@ -176,16 +303,7 @@ class Engine:
                 self.params, self.caches, jnp.asarray(last_tokens), jnp.asarray(p - 1, jnp.int32)
             )
             self.caches = slot_merge(self.caches, new_caches, slots)
-            for s in slots:
-                req = self.slot_req[s]
-                tok = int(np.asarray(nxt)[s, 0])
-                req.generated.append(tok)
-                self.slot_pos[s] += 1
-                emitted += 1
-                if len(req.generated) >= req.max_new_tokens or self.slot_pos[s] >= self.max_seq:
-                    req.done = True
-                    self.finished.append(req)
-                    self.slot_req[s] = None
+            emitted += self._commit(slots, np.asarray(nxt))
         return emitted
 
     def run(self) -> list[Request]:

