@@ -151,10 +151,21 @@ def _dot_flops(comp: _Comp, rtype: str, rest: str) -> float:
             result_elems *= d
     # contraction size from lhs operand shape + lhs_contracting_dims
     mo = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
-    operands = [o.strip() for o in rest.split(")")[0].split(",") if o.strip().startswith("%")]
+    # Operands may carry inline type annotations depending on the HLO emitter:
+    # "dot(%a, %b)" or "dot(f32[256,256]{1,0} %a, ...)" — match the %names.
+    operand_text = rest.split(")")[0]
+    operands = re.findall(r"%[\w.\-]+", operand_text)
     csize = 1
     if mo and operands:
         lhs_shapes = comp.shape_of(operands[0])
+        if not lhs_shapes:
+            # Operand defined outside this computation (or a parameter whose
+            # def didn't parse): fall back to the inline type annotation that
+            # immediately precedes the operand name (the last shape parsed
+            # from the preceding text — shape dims contain commas, so no
+            # comma splitting here).
+            pre = operand_text.split(operands[0])[0]
+            lhs_shapes = _parse_shapes(pre)[-1:]
         if lhs_shapes:
             _, dims = lhs_shapes[0]
             for idx in (int(i) for i in mo.group(1).split(",") if i):

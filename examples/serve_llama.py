@@ -1,8 +1,12 @@
 """End-to-end serving driver (the paper's workload kind): continuous-batching
 engine over a reduced Llama-3.2-1B with the mmt4d serving path —
-prefill GEMM kernels, decode GEMV kernels, slot-based admission.
+prefill GEMM kernels, decode GEMV kernels, slot-based admission, and the
+block-paged KV cache (prefix reuse + preemption; --cache-mode dense for the
+worst-case-reservation baseline).
 
   PYTHONPATH=src python examples/serve_llama.py [--requests 12]
+  PYTHONPATH=src python examples/serve_llama.py --cache-mode paged \
+      --block-size 8 --pool-pages 24   # force pool pressure -> preemption
 """
 
 import sys, os
@@ -23,12 +27,20 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--requests", type=int, default=12)
 ap.add_argument("--slots", type=int, default=4)
 ap.add_argument("--max-new", type=int, default=12)
+ap.add_argument("--cache-mode", choices=("paged", "dense"), default="paged")
+ap.add_argument("--block-size", type=int, default=16)
+ap.add_argument("--pool-pages", type=int, default=None,
+                help="paged pool size; small values force preemption")
 args = ap.parse_args()
 
 cfg = registry.get_reduced("llama3.2-1b")
 enc = EncodingConfig(enabled=True, backend="xla")
 params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
-eng = engine_lib.Engine(params, cfg, enc, slots=args.slots, max_seq=96)
+eng = engine_lib.Engine(
+    params, cfg, enc, slots=args.slots, max_seq=96,
+    cache_mode=args.cache_mode, block_size=args.block_size,
+    pool_pages=args.pool_pages,
+)
 
 rng = np.random.RandomState(0)
 arrival = 0.0
@@ -48,5 +60,11 @@ dt = time.time() - t0
 total = sum(len(r.generated) for r in eng.finished)
 print(f"served {len(eng.finished)} requests / {total} tokens "
       f"in {dt:.2f}s over {steps} engine steps ({total/dt:.2f} tok/s)")
+stats = eng.stats
+if stats["cache_mode"] == "paged":
+    print(f"  paged: peak_active={stats['peak_active']} "
+          f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "
+          f"shared_hits={stats['shared_hits']} cow={stats['cow_events']} "
+          f"preemptions={stats['preemptions']}")
 for r in eng.finished[:5]:
     print(f"  req {r.uid}: |prompt|={len(r.prompt)} gen={r.generated}")

@@ -175,6 +175,63 @@ def decode_projection_hbm_bytes(
     }
 
 
+def kv_bytes_per_token(
+    num_layers: int, num_kv_heads: int, head_dim: int, *, itemsize: int = 2
+) -> int:
+    """HBM bytes one cached token costs across all layers (K and V)."""
+    return 2 * num_layers * num_kv_heads * head_dim * itemsize
+
+
+def dense_kv_hbm_bytes(
+    slots: int, max_seq: int, num_layers: int, num_kv_heads: int, head_dim: int,
+    *, itemsize: int = 2,
+) -> int:
+    """Dense serving reservation: every slot pays worst-case max_seq tokens."""
+    return slots * max_seq * kv_bytes_per_token(
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+    )
+
+
+def paged_kv_hbm_bytes(
+    num_pages: int, block_size: int, num_layers: int, num_kv_heads: int,
+    head_dim: int, *, itemsize: int = 2,
+) -> int:
+    """Paged pool footprint (scratch page included): pages x block tokens."""
+    return num_pages * block_size * kv_bytes_per_token(
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+    )
+
+
+def kv_capacity_requests(
+    hbm_budget: int,
+    *,
+    max_seq: int,
+    mean_tokens: int,
+    block_size: int,
+    num_layers: int,
+    num_kv_heads: int,
+    head_dim: int,
+    itemsize: int = 2,
+) -> dict[str, int]:
+    """Concurrent requests one KV HBM budget sustains, dense vs paged.
+
+    Dense reserves max_seq tokens per slot regardless of use; paged holds
+    ceil(mean_tokens / block_size) pages per in-flight request (mean_tokens =
+    typical prompt + generated length), so the capacity ratio is roughly
+    max_seq / round_up(mean_tokens, block_size) — the serving-plan headroom
+    the paged engine converts into admitted requests (docs/PERF.md)."""
+    ptb = kv_bytes_per_token(num_layers, num_kv_heads, head_dim, itemsize=itemsize)
+    dense = hbm_budget // max(1, max_seq * ptb)
+    blocks_per_req = max(1, -(-mean_tokens // block_size))
+    paged = hbm_budget // max(1, blocks_per_req * block_size * ptb)
+    return {
+        "dense": int(dense),
+        "paged": int(paged),
+        "bytes_per_token": ptb,
+        "blocks_per_request": blocks_per_req,
+    }
+
+
 def _round_up(x: int, mult: int) -> int:
     return mult * math.ceil(x / mult) if mult > 0 else x
 

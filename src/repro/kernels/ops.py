@@ -292,8 +292,11 @@ def _gemv_bn1(
 def pack_rhs_q8(
     w_t: jnp.ndarray, *, shard_multiple: int = 1
 ) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """Quantize (per output channel) + pack. Returns (rhs4_q int8, s_w (N1,N0))."""
-    q, s = ref.quantize_rows(w_t)
+    """Quantize (per output channel) + pack. Returns (rhs4_q int8, s_w (N1,N0)).
+
+    Weight rows use the MSE-optimal clip search (one-time cost at load);
+    dynamic activation quantization stays absmax (encoded_matmul_q8)."""
+    q, s = ref.quantize_rows_mse(w_t)
     rhs4 = pack_rhs(q, shard_multiple=shard_multiple)
     n1, _, n0, _ = rhs4.shape
     s_pad = jnp.zeros((n1 * n0,), jnp.float32).at[: s.shape[0]].set(s)

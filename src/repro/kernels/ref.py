@@ -82,6 +82,35 @@ def quantize_rows(x2d: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return q.astype(jnp.int8), s
 
 
+_CLIP_RATIOS = (1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7)
+
+
+def quantize_rows_mse(
+    x2d: jnp.ndarray, ratios: tuple[float, ...] = _CLIP_RATIOS
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-row int8 with MSE-optimal clipping.
+
+    Absmax scales waste resolution on per-row outliers; searching a few clip
+    ratios and keeping the min-MSE quantization per row roughly halves weight
+    reconstruction error.  One-time cost — used for WEIGHT packing
+    (ops.pack_rhs_q8); dynamic activation quant keeps plain absmax."""
+    xf = x2d.astype(jnp.float32)
+    amax = jnp.maximum(jnp.max(jnp.abs(xf), axis=1), 1e-8)
+    best_err = best_q = best_s = None
+    for r in ratios:
+        s = amax * (r / 127.0)
+        q = jnp.clip(jnp.round(xf / s[:, None]), -127, 127)
+        err = jnp.sum(jnp.square(q * s[:, None] - xf), axis=1)
+        if best_err is None:
+            best_err, best_q, best_s = err, q, s
+        else:
+            upd = err < best_err
+            best_q = jnp.where(upd[:, None], q, best_q)
+            best_s = jnp.where(upd, s, best_s)
+            best_err = jnp.minimum(err, best_err)
+    return best_q.astype(jnp.int8), best_s
+
+
 def mmt4d_q8(lhs4_q, rhs4_q, s_a, s_w) -> jnp.ndarray:
     """Oracle for kernels/mmt4d_q8.py (same operand layout)."""
     acc = jnp.einsum(

@@ -27,12 +27,20 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas", "fused", "reference"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache-mode", default="paged", choices=["paged", "dense"])
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="paged pool size; small values force preemption")
     args = ap.parse_args()
 
     cfg = registry.get_reduced(args.arch)
     enc = EncodingConfig(enabled=True, backend=args.backend, interpret=True)
     params = T.model_init(jax.random.PRNGKey(args.seed), cfg, enc)
-    eng = engine_lib.Engine(params, cfg, enc, slots=args.slots, max_seq=args.max_seq)
+    eng = engine_lib.Engine(
+        params, cfg, enc, slots=args.slots, max_seq=args.max_seq,
+        cache_mode=args.cache_mode, block_size=args.block_size,
+        pool_pages=args.pool_pages,
+    )
 
     rng = np.random.RandomState(args.seed)
     t0 = time.time()
@@ -45,6 +53,11 @@ def main():
     total_new = sum(len(r.generated) for r in done)
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.2f} tok/s decode throughput incl. prefill)")
+    stats = eng.stats
+    if stats["cache_mode"] == "paged":
+        print(f"[serve] paged: peak_active={stats['peak_active']} "
+              f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "
+              f"shared_hits={stats['shared_hits']} preemptions={stats['preemptions']}")
     for r in done[: min(4, len(done))]:
         print(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} -> gen[:8]={r.generated[:8]}")
     return done

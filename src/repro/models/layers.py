@@ -201,6 +201,19 @@ def attention_chunked(
     return out[:, :sq, :h_true].astype(q.dtype)
 
 
+def paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Gather a slot-logical dense cache view from a paged pool.
+
+    pool: (P, bs, KV, D) physical pages; table: (B, NB) int32 page ids.
+    Returns (B, NB*bs, KV, D) — row b's logical positions in order, exactly
+    the dense cache slice the slot would hold (positions past the slot's
+    allocated blocks read whatever page the table points at — the decode
+    mask `slot <= pos` never attends them)."""
+    b, nb = table.shape
+    g = pool[table]  # (B, NB, bs, KV, D)
+    return g.reshape(b, nb * pool.shape[1], *pool.shape[2:])
+
+
 def attention_decode(
     q: jnp.ndarray,
     k_cache: jnp.ndarray,
@@ -303,7 +316,30 @@ def attention_apply(
         k = rope_apply(k, positions, cfg.rope_theta)
 
     new_cache = cache
-    if phase is Phase.DECODE and cache is not None and kv_src is None:
+    if (
+        phase is Phase.DECODE and cache is not None and kv_src is None
+        and "table" in cache
+    ):
+        # Paged KV cache: pool (P, bs, KV, D) + per-slot block table (B, NB).
+        # Row b writes its token into page table[b, pos//bs] at offset
+        # pos % bs (the engine guarantees the page exists and is private to
+        # the slot — shared prefix pages are immutable full blocks), then
+        # attends the table-gathered logical view with the SAME per-row `pos`
+        # masking as the dense path.  Idle rows point at the scratch page.
+        assert window == 0, "paged cache excludes sliding-window configs"
+        table = cache["table"]
+        bs_page = cache["k"].shape[1]
+        posv = jnp.broadcast_to(jnp.asarray(pos), (b,))
+        pg = table[jnp.arange(b), posv // bs_page]
+        off = posv % bs_page
+        k_pool = cache["k"].at[pg, off].set(k[:, 0])
+        v_pool = cache["v"].at[pg, off].set(v[:, 0])
+        out = attention_decode(
+            q, paged_gather(k_pool, table), paged_gather(v_pool, table),
+            pos=pos, window=0,
+        )
+        new_cache = {"k": k_pool, "v": v_pool, "table": table}
+    elif phase is Phase.DECODE and cache is not None and kv_src is None:
         s_c = cache["k"].shape[1]
         slot = jnp.mod(jnp.asarray(pos), s_c) if window > 0 else jnp.asarray(pos)
         if pos_vec:
@@ -348,6 +384,10 @@ def attention_apply(
             keep_padded_heads=keep_pad,
         )
         if cache is not None and kv_src is None:
+            assert "table" not in cache, (
+                "paged caches are decode-only; the engine prefills into a "
+                "temporary dense cache and scatters blocks into the pool"
+            )
             s_c = cache["k"].shape[1]
             if window > 0 and s >= s_c:
                 new_cache = {"k": k[:, -s_c:], "v": v[:, -s_c:]}
@@ -367,6 +407,22 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
     return {
         "k": jnp.zeros((batch, s_c, cfg.num_kv_heads, cfg.head_dim), dt),
         "v": jnp.zeros((batch, s_c, cfg.num_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def attn_paged_cache_init(
+    cfg: ModelConfig, batch: int, max_seq: int, *, block_size: int, num_pages: int
+) -> dict:
+    """Paged attention cache: a page pool + per-slot block table, replacing
+    the dense (batch, max_seq) reservation.  Page 0 is the scratch page idle
+    rows write to (serving/paged.py); tables init to it."""
+    assert cfg.sliding_window == 0, "paged cache excludes sliding-window configs"
+    nb = -(-max_seq // block_size)
+    dt = cfg.activation_dtype
+    return {
+        "k": jnp.zeros((num_pages, block_size, cfg.num_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((num_pages, block_size, cfg.num_kv_heads, cfg.head_dim), dt),
+        "table": jnp.zeros((batch, nb), jnp.int32),
     }
 
 

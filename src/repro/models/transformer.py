@@ -96,8 +96,44 @@ def model_init(key: jax.Array, cfg: ModelConfig, enc: packed.EncodingConfig) -> 
     return params
 
 
-def cache_init(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+def cache_init(
+    cfg: ModelConfig,
+    batch: int,
+    max_seq: int,
+    *,
+    cache_mode: str = "dense",
+    block_size: int = 16,
+    num_pages: int | None = None,
+) -> dict:
+    """Serving caches for every layer.
+
+    cache_mode="dense": per-slot (batch, max_seq) KV rows (the PR-1 layout,
+    kept as the parity baseline; the only mode for recurrent state).
+    cache_mode="paged": per-layer page pool (num_pages, block_size) + block
+    table — attention-only, no sliding window; the engine owns the page
+    allocator (serving/paged.py) and threads tables through the cache leaves.
+    """
+    assert cache_mode in ("dense", "paged"), cache_mode
     n_groups, tail = _pattern_layout(cfg)
+    if cache_mode == "paged":
+        assert all(t == "attn" for t in cfg.block_pattern), (
+            "paged KV cache requires an attention-only pattern; recurrent "
+            "families keep dense state"
+        )
+        if num_pages is None:
+            # Parity default: full dense coverage (+ scratch page 0).
+            num_pages = 1 + batch * (-(-max_seq // block_size))
+
+        def one(_t):
+            return L.attn_paged_cache_init(
+                cfg, batch, max_seq, block_size=block_size, num_pages=num_pages
+            )
+
+        g = tuple(one(t) for t in cfg.block_pattern)
+        caches = {"groups": _stack_caches(g, n_groups)}
+        if tail:
+            caches["tail"] = tuple(one(t) for t in tail)
+        return caches
     g = _group_cache_init(cfg, cfg.block_pattern, batch, max_seq)
     caches = {"groups": _stack_caches(g, n_groups)}
     if tail:

@@ -15,6 +15,18 @@ caches replace the engine's wholesale (no per-slot merge scatter).  The
 pre-existing per-position-group dispatch loop is kept as
 decode_mode="grouped" — it is the baseline the vectorized path is benchmarked
 against (benchmarks/table2_throughput.py, BENCH_decode.json).
+
+Paged KV cache (cache_mode="paged", the default for attention-only models):
+KV memory is a global pool of fixed-size pages plus a per-slot block table
+(serving/paged.py owns the host-side allocator; models/layers.py gathers
+pages by table inside the decode dispatch).  Admission charges only the
+blocks a prompt actually needs, shared prompt prefixes map to the same
+physical pages (copy-on-write at the first divergent block), and decode
+growth preempts the lowest-priority slot (latest admission ticket — its
+request requeues and replays) when the pool is exhausted.  cache_mode="dense"
+keeps the PR-1 worst-case (slots, max_seq) reservation as the parity
+baseline; recurrent families (rec/rwkv) and sliding-window configs are
+auto-routed to it.
 """
 
 from __future__ import annotations
@@ -30,6 +42,7 @@ import numpy as np
 from repro.core.encoding import Phase
 from repro.core.packed import EncodingConfig
 from repro.models import transformer as T
+from repro.serving import paged as paged_lib
 
 
 def make_prefill_step(cfg, enc: EncodingConfig) -> Callable:
@@ -166,7 +179,17 @@ class Engine:
     batch_prefill: admit every queued request that fits in one right-padded
     prefill call (attention-only, full-attention models; recurrent state and
     ring-buffer caches would absorb the pad garbage, so those families keep
-    the exact per-slot prefill).
+    the exact per-slot prefill).  The paged path always batch-prefills — it
+    prefills into a throwaway dense cache and scatters only real prompt
+    blocks into the pool, so pad garbage never lands anywhere persistent and
+    the flag has nothing to protect against.
+
+    cache_mode:
+      "paged" (default) — pool-of-pages KV with per-slot block tables,
+        prefix reuse and preemption (module docstring).  Requires
+        attention-only, no sliding window, vectorized decode; anything else
+        auto-routes to dense.
+      "dense" — the worst-case (slots, max_seq) reservation (parity baseline).
     """
 
     def __init__(
@@ -179,42 +202,255 @@ class Engine:
         max_seq: int = 256,
         decode_mode: str = "vectorized",
         batch_prefill: bool = True,
+        cache_mode: str = "paged",
+        block_size: int = 16,
+        pool_pages: int | None = None,
     ):
         assert decode_mode in ("vectorized", "grouped"), decode_mode
+        assert cache_mode in ("paged", "dense"), cache_mode
         self.params, self.cfg, self.enc = params, cfg, enc
         self.slots = slots
         self.max_seq = max_seq
+        attn_only = all(t == "attn" for t in cfg.block_pattern)
         # Vectorized decode is only sound for attention KV caches, where an
         # inactive row's write lands at a masked position.  Recurrent state
         # (rec/rwkv) has no position mask — an idle row's state would absorb a
         # token-0 update every step and later admissions prefill FROM that
         # state — so those families keep the grouped path.
-        if decode_mode == "vectorized" and not all(
-            t == "attn" for t in cfg.block_pattern
-        ):
+        if decode_mode == "vectorized" and not attn_only:
             decode_mode = "grouped"
         self.decode_mode = decode_mode
+        # Paged KV needs position-masked attention reads (attn-only, no ring
+        # buffer) and the per-slot pos vector of the vectorized step.
+        if cache_mode == "paged" and (
+            not attn_only or cfg.sliding_window != 0 or decode_mode != "vectorized"
+        ):
+            cache_mode = "dense"
+        self.cache_mode = cache_mode
         self.prefill_fn = jax.jit(make_prefill_step(cfg, enc))
         # Vectorized mode replaces the caches wholesale each step, so the old
         # buffers can be donated (in-place update on device, no copy).  The
         # grouped path re-reads self.caches after the call (merge) — no donate.
         donate = (1,) if decode_mode == "vectorized" else ()
         self.decode_fn = jax.jit(make_decode_step(cfg, enc), donate_argnums=donate)
-        self.caches = T.cache_init(cfg, slots, max_seq)
+        if cache_mode == "paged":
+            self.block_size = block_size
+            self.num_blocks = -(-max_seq // block_size)
+            if pool_pages is None:
+                # Parity default: the pool covers the dense worst case, so
+                # nothing preempts unless the caller shrinks it.
+                pool_pages = 1 + slots * self.num_blocks
+            self.alloc = paged_lib.BlockAllocator(pool_pages, block_size)
+            self.caches = T.cache_init(
+                cfg, slots, max_seq, cache_mode="paged",
+                block_size=block_size, num_pages=pool_pages,
+            )
+            self.block_table = np.full(
+                (slots, self.num_blocks), paged_lib.SCRATCH_PAGE, np.int32
+            )
+            self.slot_pages: list[list[int]] = [[] for _ in range(slots)]
+            self.slot_ticket = np.zeros(slots, np.int64)
+            self._ticket = 0
+            self._tables_dirty = True
+            self.preemptions = 0
+            self.peak_active = 0
+        else:
+            self.caches = T.cache_init(cfg, slots, max_seq)
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self.batch_prefill = (
             batch_prefill
-            and all(t == "attn" for t in cfg.block_pattern)
+            and attn_only
             and cfg.sliding_window == 0
         )
 
     def submit(self, req: Request):
+        if self.cache_mode == "paged" and req.max_new_tokens > 0:
+            # Reject unserviceable requests up front: the most pages the
+            # request can ever hold (decode stops at max_seq) must fit the
+            # pool, or admission could never run it.
+            worst_pos = min(len(req.prompt) + req.max_new_tokens, self.max_seq) - 1
+            worst = worst_pos // self.block_size + 1
+            if worst > self.alloc.capacity:
+                raise ValueError(
+                    f"request {req.uid} can need {worst} pages but the pool "
+                    f"holds {self.alloc.capacity}; grow pool_pages or shrink "
+                    "the request"
+                )
         self.queue.append(req)
 
+    # ---- paged admission / page management ---------------------------------
+
+    def _finish_degenerate(self, req: Request) -> None:
+        req.done = True
+        self.finished.append(req)
+
+    def _admit_paged(self):
+        free = [s for s in range(self.slots) if self.slot_req[s] is None]
+        batch: list[tuple[int, Request, paged_lib.PagePlan]] = []
+        while free and self.queue:
+            req = self.queue[0]
+            if req.max_new_tokens <= 0:
+                self.queue.popleft()
+                self._finish_degenerate(req)
+                continue
+            nblocks, shared = self.alloc.plan_prompt(req.prompt)
+            if nblocks - len(shared) > self.alloc.available():
+                break  # pool pressure: stop admitting (FIFO order preserved)
+            plan = self.alloc.commit_prompt(req.prompt, nblocks, shared)
+            assert plan is not None
+            self.queue.popleft()
+            batch.append((free.pop(0), req, plan))
+        if not batch:
+            return
+        # ONE right-padded batched prefill into a TEMPORARY dense cache
+        # (pad rounds to a power of two >= block_size, so padded lengths are
+        # block-aligned and compiled shapes stay O(slots * log(max_seq))),
+        # then scatter the computed K/V blocks into their pool pages.
+        # Shared prefix pages are NOT rewritten: suffix zero-padding is exact
+        # in the chunked attention, so the original owner's prefill already
+        # wrote bitwise-identical content (the conformance tests pin this).
+        maxlen = max(len(r.prompt) for _, r, _ in batch)
+        lp = max(
+            self.block_size,
+            min(1 << (maxlen - 1).bit_length(), self.num_blocks * self.block_size),
+        )
+        toks = np.zeros((len(batch), lp), np.int32)
+        for i, (_, r, _) in enumerate(batch):
+            toks[i, : len(r.prompt)] = r.prompt
+        tmp = T.cache_init(self.cfg, len(batch), lp)
+        _, tmp = self.prefill_fn(self.params, jnp.asarray(toks), tmp)
+        self._scatter_prefill(tmp, batch)
+        for s, r, plan in batch:
+            self.slot_req[s] = r
+            self.slot_pos[s] = len(r.prompt)
+            self.slot_pages[s] = list(plan.pages)
+            self.block_table[s, :] = paged_lib.SCRATCH_PAGE
+            self.block_table[s, : len(plan.pages)] = plan.pages
+            self.slot_ticket[s] = self._ticket
+            self._ticket += 1
+        self._tables_dirty = True
+
+    def _scatter_prefill(self, tmp, batch) -> None:
+        """Write each admitted request's non-shared prompt blocks from the
+        temporary dense prefill cache into their pool pages — one gather +
+        one scatter per cache leaf."""
+        bs = self.block_size
+        ri: list[int] = []
+        bi: list[int] = []
+        pgs: list[int] = []
+        for i, (_, _r, plan) in enumerate(batch):
+            for j, (pg, sh) in enumerate(zip(plan.pages, plan.shared)):
+                if not sh:
+                    ri.append(i)
+                    bi.append(j)
+                    pgs.append(pg)
+        if not pgs:
+            return
+        ria = jnp.asarray(ri, jnp.int32)
+        bia = jnp.asarray(bi, jnp.int32)
+        pga = jnp.asarray(pgs, jnp.int32)
+        flat, _ = jax.tree_util.tree_flatten_with_path(tmp)
+        tmp_by_path = {jax.tree_util.keystr(p): v for p, v in flat}
+
+        def one(path, leaf):
+            if str(getattr(path[-1], "key", "")) == "table":
+                return leaf
+            part = tmp_by_path[jax.tree_util.keystr(path)]
+            if _batch_axis(path) == 1:  # stacked groups: (G, B, Lp, KV, HD)
+                g, nb, lpad, kvh, hd = part.shape
+                pr = part.reshape(g, nb, lpad // bs, bs, kvh, hd)
+                return leaf.at[:, pga].set(pr[:, ria, bia])
+            nb, lpad, kvh, hd = part.shape
+            pr = part.reshape(nb, lpad // bs, bs, kvh, hd)
+            return leaf.at[pga].set(pr[ria, bia])
+
+        self.caches = jax.tree_util.tree_map_with_path(one, self.caches)
+
+    def _with_tables(self, caches):
+        """Refresh every `table` cache leaf from the host block table."""
+        tbl = self.block_table
+
+        def one(path, leaf):
+            if str(getattr(path[-1], "key", "")) == "table":
+                return jnp.asarray(np.broadcast_to(tbl, leaf.shape))
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(one, caches)
+
+    def _preempt(self, s: int) -> None:
+        """Evict slot `s`: free its pages and requeue its request at the
+        queue front.  Greedy decode is deterministic, so the replay emits
+        the same tokens the uninterrupted run would have."""
+        req = self.slot_req[s]
+        req.generated.clear()
+        self.alloc.free_pages(self.slot_pages[s])
+        self.slot_pages[s] = []
+        self.block_table[s, :] = paged_lib.SCRATCH_PAGE
+        self.slot_req[s] = None
+        self.slot_pos[s] = 0
+        self.queue.appendleft(req)
+        self._tables_dirty = True
+        self.preemptions += 1
+
+    def _ensure_decode_pages(self) -> None:
+        """Decode growth: each active slot must own the page its next token
+        writes into.  Allocate at block boundaries; when the pool is dry,
+        preempt the lowest-priority slot (latest admission ticket) until a
+        page frees — possibly the requesting slot itself."""
+        order = sorted(
+            (s for s in range(self.slots) if self.slot_req[s] is not None),
+            key=lambda s: self.slot_ticket[s],
+        )
+        for s in order:
+            if self.slot_req[s] is None:
+                continue  # preempted while serving an earlier slot
+            pos = max(int(self.slot_pos[s]) - 1, 0)
+            need = pos // self.block_size + 1
+            while self.slot_req[s] is not None and len(self.slot_pages[s]) < need:
+                page = self.alloc.alloc()
+                if page is None:
+                    victims = [
+                        v for v in range(self.slots) if self.slot_req[v] is not None
+                    ]
+                    victim = max(victims, key=lambda v: self.slot_ticket[v])
+                    self._preempt(victim)
+                    continue
+                self.slot_pages[s].append(page)
+                self.block_table[s, len(self.slot_pages[s]) - 1] = page
+                self._tables_dirty = True
+
+    @property
+    def stats(self) -> dict:
+        out = {"cache_mode": self.cache_mode, "decode_mode": self.decode_mode}
+        if self.cache_mode == "paged":
+            out.update(self.alloc.stats)
+            out.update(
+                pages_total=self.alloc.capacity,
+                pages_in_use=self.alloc.in_use(),
+                pages_free=self.alloc.available(),
+                preemptions=self.preemptions,
+                peak_active=self.peak_active,
+                block_size=self.block_size,
+            )
+        return out
+
+    def audit(self) -> None:
+        """Assert allocator/table consistency (tests call this every step)."""
+        if self.cache_mode != "paged":
+            return
+        self.alloc.audit(
+            [self.slot_pages[s] for s in range(self.slots)
+             if self.slot_req[s] is not None]
+        )
+
+    # ---- dense admission ---------------------------------------------------
+
     def _admit(self):
+        if self.cache_mode == "paged":
+            return self._admit_paged()
         free = [s for s in range(self.slots) if self.slot_req[s] is None]
         batch: list[tuple[int, Request]] = []
         while free and self.queue:
@@ -267,20 +503,38 @@ class Engine:
                 self.finished.append(req)
                 self.slot_req[s] = None
                 self.slot_pos[s] = 0  # freed rows decode (discarded) at pos 0
+                if self.cache_mode == "paged":
+                    # Freed-on-finish: every page back to the pool (shared
+                    # pages by refcount), table row back to scratch.
+                    self.alloc.free_pages(self.slot_pages[s])
+                    self.slot_pages[s] = []
+                    self.block_table[s, :] = paged_lib.SCRATCH_PAGE
+                    self._tables_dirty = True
         return emitted
 
     def step(self) -> int:
         """One engine iteration: admit + one decode for every active slot."""
         self._admit()
+        if self.cache_mode == "paged":
+            self._ensure_decode_pages()
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
             return 0
+        if self.cache_mode == "paged":
+            self.peak_active = max(self.peak_active, len(active))
         last_tokens = np.zeros((self.slots, 1), np.int32)
         for s in active:
             req = self.slot_req[s]
             last = req.generated[-1] if req.generated else int(req.prompt[-1])
             last_tokens[s, 0] = last
         if self.decode_mode == "vectorized":
+            if self.cache_mode == "paged" and self._tables_dirty:
+                # Thread the (host-maintained) block tables into the cache
+                # leaves; the decode dispatch gathers K/V pages by table.
+                # Unchanged tables flow through the donated decode call, so
+                # steady-state steps skip the host->device refresh.
+                self.caches = self._with_tables(self.caches)
+                self._tables_dirty = False
             # One dispatch serves all active slots regardless of position skew:
             # each row decodes at its own pos.  Inactive rows decode (and write
             # their cache row at pos 0) with token 0; that write is harmless

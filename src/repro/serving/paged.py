@@ -1,0 +1,208 @@
+"""Block-paged KV-cache allocator — the serving memory plan behind Engine's
+cache_mode="paged".
+
+The dense engine reserves a worst-case (slots, max_seq) KV row per slot; HBM
+is spent on sequence positions that mostly never exist (short prompts, early
+decode).  The paged plan instead carves the per-layer cache into a global pool
+of fixed-size pages (`block_size` tokens each) and gives every slot a block
+table mapping logical block j -> physical page.  Capacity then scales with
+TOKENS IN FLIGHT, not slots x max_seq (core/encoding.py has the math; the
+capacity-vs-dense sweep lives in benchmarks/table2_throughput.py).
+
+This module is the host-side bookkeeping only (pure numpy/python — nothing
+here is traced):
+
+  * free-list page allocation with exact refcounts,
+  * a prefix registry: immutable full blocks of a prompt are keyed by their
+    token prefix; a later request with the same leading tokens maps its
+    leading blocks to the SAME physical pages (shared, refcount++) instead of
+    allocating, and takes a private page from the first block that diverges
+    (or is still appendable) — copy-on-write at the first divergent block,
+  * audit() — the invariant checker the allocator tests drive.
+
+Only FULL blocks that can never be written again are shareable: decode
+re-writes position plen-1 (the engine's first decode step recomputes the last
+prompt token's K/V), so a prompt of length P shares at most its first
+(P-1)//block_size blocks; everything from the first divergent or appendable
+block on is private to the slot.  Page 0 is a reserved scratch page: idle
+decode rows point their writes at it, and it is never allocated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SCRATCH_PAGE = 0
+
+
+@dataclasses.dataclass
+class PagePlan:
+    """Physical pages covering one prompt, leading `shared` pages reused."""
+
+    pages: list[int]
+    shared: list[bool]
+
+    @property
+    def new_pages(self) -> list[int]:
+        return [p for p, sh in zip(self.pages, self.shared) if not sh]
+
+
+class BlockAllocator:
+    """Fixed pool of `num_pages` pages of `block_size` tokens (page 0 scratch)."""
+
+    def __init__(self, num_pages: int, block_size: int):
+        assert num_pages >= 2, "need at least one allocatable page + scratch"
+        assert block_size > 0 and (block_size & (block_size - 1)) == 0, (
+            "block_size must be a power of two (prefill pads to block multiples)"
+        )
+        self.num_pages = num_pages
+        self.block_size = block_size
+        # LIFO free list: lowest page ids first, scratch excluded.
+        self.free: list[int] = list(range(num_pages - 1, SCRATCH_PAGE, -1))
+        self.refcount = np.zeros(num_pages, np.int32)
+        self.registry: dict[bytes, int] = {}   # token-prefix key -> page
+        self.page_key: dict[int, bytes] = {}   # page -> its registry key
+        self.stats = {
+            "allocs": 0, "frees": 0, "shared_hits": 0, "cow_events": 0,
+            "peak_in_use": 0,
+        }
+
+    # -- capacity ------------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.num_pages - 1
+
+    def available(self) -> int:
+        return len(self.free)
+
+    def in_use(self) -> int:
+        return self.capacity - len(self.free)
+
+    def blocks_for_tokens(self, tokens: int) -> int:
+        return max(1, -(-tokens // self.block_size))
+
+    # -- raw page ops --------------------------------------------------------
+
+    def alloc(self) -> int | None:
+        if not self.free:
+            return None
+        page = self.free.pop()
+        assert self.refcount[page] == 0, page
+        self.refcount[page] = 1
+        self.stats["allocs"] += 1
+        self.stats["peak_in_use"] = max(self.stats["peak_in_use"], self.in_use())
+        return page
+
+    def share(self, page: int) -> int:
+        assert self.refcount[page] > 0, f"sharing unreferenced page {page}"
+        self.refcount[page] += 1
+        self.stats["shared_hits"] += 1
+        return page
+
+    def free_page(self, page: int) -> None:
+        if page == SCRATCH_PAGE:
+            return
+        assert self.refcount[page] > 0, f"double free of page {page}"
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            key = self.page_key.pop(page, None)
+            if key is not None and self.registry.get(key) == page:
+                del self.registry[key]
+            self.free.append(page)
+            self.stats["frees"] += 1
+
+    # -- prompt planning (prefix reuse + copy-on-write) ----------------------
+
+    def _key(self, prompt: np.ndarray, j: int) -> bytes:
+        """Registry key for block j: the FULL token prefix through its end —
+        chained identity, so equal keys imply equal K/V content."""
+        return np.ascontiguousarray(
+            np.asarray(prompt[: (j + 1) * self.block_size], np.int32)
+        ).tobytes()
+
+    def shareable_blocks(self, prompt_len: int) -> int:
+        """Blocks of this prompt that are immutable under decode (the engine's
+        first decode step re-writes position prompt_len - 1)."""
+        return max(0, (prompt_len - 1) // self.block_size)
+
+    def plan_prompt(self, prompt: np.ndarray) -> tuple[int, dict[int, int]]:
+        """(total blocks covering the prompt, {block j -> reusable page})."""
+        nblocks = self.blocks_for_tokens(len(prompt))
+        shared: dict[int, int] = {}
+        for j in range(self.shareable_blocks(len(prompt))):
+            page = self.registry.get(self._key(prompt, j))
+            if page is None:
+                break  # chained keys: later blocks cannot match either
+            shared[j] = page
+        return nblocks, shared
+
+    def commit_prompt(
+        self, prompt: np.ndarray, nblocks: int, shared: dict[int, int]
+    ) -> PagePlan | None:
+        """Materialize a plan: refcount shared pages, allocate private ones,
+        register newly-written immutable blocks.  Returns None (and rolls
+        back) if the pool cannot cover the private blocks."""
+        pages: list[int] = []
+        is_shared: list[bool] = []
+        immutable = self.shareable_blocks(len(prompt))
+        cow_done = False
+        for j in range(nblocks):
+            if j in shared:
+                pages.append(self.share(shared[j]))
+                is_shared.append(True)
+                continue
+            page = self.alloc()
+            if page is None:
+                for p, sh in zip(pages, is_shared):
+                    self.free_page(p)
+                return None
+            if shared and not cow_done:
+                # First private block after a shared prefix: the
+                # copy-on-write point (divergent or appendable block).
+                self.stats["cow_events"] += 1
+                cow_done = True
+            if j < immutable:
+                key = self._key(prompt, j)
+                self.registry[key] = page
+                self.page_key[page] = key
+            pages.append(page)
+            is_shared.append(False)
+        return PagePlan(pages=pages, shared=is_shared)
+
+    def free_pages(self, pages: list[int]) -> None:
+        for p in pages:
+            self.free_page(p)
+
+    # -- invariants ----------------------------------------------------------
+
+    def audit(self, tables_in_use: list[list[int]]) -> None:
+        """Raises AssertionError unless the allocator state is exactly
+        consistent with the referenced tables:
+
+          * every referenced page is allocated, never on the free list,
+          * refcounts equal the number of table references exactly,
+          * a page referenced by two tables is in the prefix registry
+            (sharing happens only through prefix reuse),
+          * free + in-use partitions the pool (scratch excluded)."""
+        refs: dict[int, int] = {}
+        for table in tables_in_use:
+            for p in table:
+                assert p != SCRATCH_PAGE, "scratch page referenced as data"
+                refs[p] = refs.get(p, 0) + 1
+        free_set = set(self.free)
+        assert len(free_set) == len(self.free), "duplicate pages on free list"
+        for p, n in refs.items():
+            assert p not in free_set, f"page {p} both referenced and free"
+            assert self.refcount[p] == n, (
+                f"page {p}: refcount {self.refcount[p]} != {n} references"
+            )
+            if n > 1:
+                assert p in self.page_key, f"page {p} multiply-owned unregistered"
+        for p in range(1, self.num_pages):
+            if p not in refs:
+                assert self.refcount[p] == 0, f"page {p} leaked (rc>0, unreferenced)"
+                assert p in free_set, f"page {p} neither free nor referenced"
+        assert len(free_set) + len(refs) == self.capacity

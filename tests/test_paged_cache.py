@@ -1,0 +1,219 @@
+"""Paged KV-cache allocator invariants (serving/paged.py) and the paged
+engine's page accounting: no double allocation, exact freed-on-finish
+refcounts, copy-on-write only at the first divergent block, preempted
+requests finishing with correct tokens."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import encoding
+from repro.core.packed import EncodingConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.serving import engine as engine_lib
+from repro.serving import paged as paged_lib
+
+ENC = EncodingConfig(enabled=True, backend="xla")
+
+
+# ---------------------------------------------------------------------------
+# Pure allocator
+
+
+def test_allocator_no_double_allocation_fuzz():
+    """Random alloc/free interleavings: a page is never handed out twice,
+    and free + in-use always partitions the pool exactly."""
+    rng = np.random.RandomState(0)
+    alloc = paged_lib.BlockAllocator(num_pages=9, block_size=4)
+    held: list[int] = []
+    for _ in range(500):
+        if held and (rng.rand() < 0.45 or not alloc.available()):
+            alloc.free_page(held.pop(rng.randint(len(held))))
+        else:
+            page = alloc.alloc()
+            if page is None:
+                assert alloc.available() == 0
+                continue
+            assert page not in held, "double-allocated page"
+            assert page != paged_lib.SCRATCH_PAGE
+            held.append(page)
+        alloc.audit([held])
+    for p in list(held):
+        alloc.free_page(p)
+    alloc.audit([])
+    assert alloc.available() == alloc.capacity
+
+
+def test_allocator_prefix_share_and_cow_first_divergence():
+    """Two prompts sharing exactly two full blocks: the leading two pages are
+    refcount-shared, copy-on-write triggers exactly once — at the first
+    divergent block — and every later block allocates privately."""
+    bs = 4
+    alloc = paged_lib.BlockAllocator(num_pages=17, block_size=bs)
+    a = np.arange(1, 14, dtype=np.int32)           # 13 tokens: 4 blocks
+    nb_a, shared_a = alloc.plan_prompt(a)
+    assert (nb_a, shared_a) == (4, {})             # empty registry: no reuse
+    plan_a = alloc.commit_prompt(a, nb_a, shared_a)
+    assert plan_a.shared == [False] * 4
+    assert alloc.stats["cow_events"] == 0
+
+    b = a.copy()
+    b[2 * bs] += 1                                  # diverge at block 2
+    nb_b, shared_b = alloc.plan_prompt(b)
+    assert nb_b == 4 and set(shared_b) == {0, 1}    # blocks 0,1 reusable
+    assert [shared_b[j] for j in (0, 1)] == plan_a.pages[:2]
+    plan_b = alloc.commit_prompt(b, nb_b, shared_b)
+    assert plan_b.shared == [True, True, False, False]
+    assert plan_b.pages[:2] == plan_a.pages[:2]
+    assert not set(plan_b.pages[2:]) & set(plan_a.pages), "divergent blocks share"
+    assert alloc.stats["cow_events"] == 1           # exactly one CoW point
+    assert alloc.refcount[plan_a.pages[0]] == 2
+    alloc.audit([plan_a.pages, plan_b.pages])
+
+    # A prompt divergent from block 0 shares nothing and triggers no CoW.
+    c = a.copy()
+    c[0] += 1
+    nb_c, shared_c = alloc.plan_prompt(c)
+    assert shared_c == {}
+    alloc.commit_prompt(c, nb_c, shared_c)
+    assert alloc.stats["cow_events"] == 1
+
+
+def test_allocator_partial_last_block_never_shared():
+    """The block holding position plen-1 is appendable (decode rewrites it),
+    so it must never enter the prefix registry."""
+    bs = 4
+    alloc = paged_lib.BlockAllocator(num_pages=9, block_size=bs)
+    a = np.arange(1, 9, dtype=np.int32)    # 8 tokens: blocks 0,1 full
+    nb_a, shared_a = alloc.plan_prompt(a)
+    plan_a = alloc.commit_prompt(a, nb_a, shared_a)
+    assert plan_a is not None
+    # shareable = (8-1)//4 = 1: only block 0 registered, block 1 appendable.
+    nb, shared = alloc.plan_prompt(a.copy())
+    assert set(shared) == {0}
+
+
+def test_allocator_commit_rolls_back_when_pool_dry():
+    alloc = paged_lib.BlockAllocator(num_pages=3, block_size=4)  # capacity 2
+    long = np.arange(1, 14, dtype=np.int32)  # needs 4 blocks
+    nb, shared = alloc.plan_prompt(long)
+    assert alloc.commit_prompt(long, nb, shared) is None
+    alloc.audit([])                           # rollback left nothing behind
+    assert alloc.available() == alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# Engine-level accounting
+
+
+def _drain(eng, *, audit=True):
+    steps = 0
+    while eng.queue or any(r is not None for r in eng.slot_req):
+        eng.step()
+        if audit:
+            eng.audit()
+        steps += 1
+        assert steps < 1000
+    return {r.uid: r.generated for r in eng.finished}
+
+
+def test_engine_freed_on_finish_exact():
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    eng = engine_lib.Engine(
+        params, cfg, ENC, slots=3, max_seq=32, cache_mode="paged", block_size=4
+    )
+    rng = np.random.RandomState(3)
+    for i in range(6):
+        eng.submit(engine_lib.Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, rng.randint(2, 10)).astype(np.int32),
+            max_new_tokens=int(rng.randint(1, 7)),
+        ))
+    done = _drain(eng)
+    assert len(done) == 6
+    stats = eng.stats
+    assert stats["pages_in_use"] == 0
+    assert stats["pages_free"] == stats["pages_total"]
+    assert stats["allocs"] == stats["frees"]          # every page returned once
+    assert all(int(p) == paged_lib.SCRATCH_PAGE for p in eng.block_table.ravel())
+
+
+def test_engine_preempted_requests_finish_with_correct_tokens():
+    """A pool too small for concurrent growth forces eviction + replay; the
+    preempted requests must still produce exactly the dense engine's tokens."""
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    rng = np.random.RandomState(4)
+    reqs = [
+        engine_lib.Request(
+            uid=i, prompt=rng.randint(1, cfg.vocab_size, 5 + i).astype(np.int32),
+            max_new_tokens=8,
+        )
+        for i in range(3)
+    ]
+    import dataclasses
+    eng_d = engine_lib.Engine(params, cfg, ENC, slots=3, max_seq=32, cache_mode="dense")
+    for r in reqs:
+        eng_d.submit(dataclasses.replace(r, generated=[]))
+    want = _drain(eng_d, audit=False)
+
+    eng_p = engine_lib.Engine(
+        params, cfg, ENC, slots=3, max_seq=32, cache_mode="paged",
+        block_size=4, pool_pages=5,   # capacity 4 = one request's worst case
+    )
+    for r in reqs:
+        eng_p.submit(dataclasses.replace(r, generated=[]))
+    got = _drain(eng_p)
+    assert eng_p.stats["preemptions"] > 0, eng_p.stats
+    assert got == want
+
+
+def test_engine_rejects_unserviceable_request():
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    eng = engine_lib.Engine(
+        params, cfg, ENC, slots=2, max_seq=64, cache_mode="paged",
+        block_size=4, pool_pages=4,
+    )
+    # Rejected at submit, before any page could be committed: a half-admitted
+    # batch must never be abandoned mid-flight.
+    with pytest.raises(ValueError, match="pool"):
+        eng.submit(engine_lib.Request(
+            uid=0, prompt=np.arange(1, 30, dtype=np.int32), max_new_tokens=8,
+        ))
+    eng.audit()
+    assert eng.alloc.available() == eng.alloc.capacity
+
+
+# ---------------------------------------------------------------------------
+# Gather correctness + capacity math (non-hypothesis seeds; the hypothesis
+# sweep lives in tests/test_paged_property.py)
+
+
+def test_paged_gather_matches_dense_slice_seeded():
+    rng = np.random.RandomState(5)
+    b, nb, bs, kv, hd = 3, 4, 4, 2, 6
+    dense = rng.randn(b, nb * bs, kv, hd).astype(np.float32)
+    pool = np.zeros((1 + b * nb, bs, kv, hd), np.float32)
+    table = np.zeros((b, nb), np.int32)
+    page = 1
+    for i in range(b):
+        for j in range(nb):
+            pool[page] = dense[i, j * bs : (j + 1) * bs]
+            table[i, j] = page
+            page += 1
+    got = L.paged_gather(jnp.asarray(pool), jnp.asarray(table))
+    np.testing.assert_array_equal(np.asarray(got), dense)
+
+
+def test_kv_capacity_math():
+    cap = encoding.kv_capacity_requests(
+        hbm_budget=16 * (1 << 20), max_seq=2048, mean_tokens=256,
+        block_size=16, num_layers=16, num_kv_heads=2, head_dim=64,
+    )
+    # 256-token requests against a 2048-token worst case: 8x the requests.
+    assert cap["paged"] == 8 * cap["dense"]
+    assert cap["bytes_per_token"] == 2 * 16 * 2 * 64 * 2

