@@ -1,0 +1,128 @@
+"""Bench-regression gate: compare fresh --quick BENCH_*.json against the
+committed baselines and exit nonzero on regression.
+
+    PYTHONPATH=src python benchmarks/run.py --quick          # writes BENCH_*.json
+    python benchmarks/check_regression.py                    # gates on them
+
+Three check modes, chosen per metric:
+
+  min_abs        fresh >= value.  Hard floors for invariants and for
+                 deterministic model-derived ratios (e.g. the w4a8 decode
+                 weight-stream win must stay >= 1.5x w8a8 — the PR's
+                 acceptance bar, kept live in CI).
+  max_abs        fresh <= value.  Dispatch-count ceilings.
+  baseline_frac  fresh >= baseline_value * frac.  For metrics read from the
+                 committed baseline file: frac ~0.99 for deterministic
+                 quantities (traffic models, scheduler counters — same seeds,
+                 same code, same numbers), a wide band (0.2) for wall-clock
+                 throughputs so heterogeneous CI runners don't flap but an
+                 artificially slowed tree still trips the gate.
+
+Every failure prints a ``REGRESSION`` line; missing files/metrics are also
+failures (a bench that silently stopped emitting a metric is a regression).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+# (file, dotted.metric.path, mode, param)
+CHECKS = [
+    # -- decode fast path: dispatch + traffic invariants --
+    ("BENCH_decode.json", "engine.vectorized.decode_calls_per_step", "max_abs", 1.0),
+    ("BENCH_decode.json", "engine.vectorized_vs_grouped_speedup", "min_abs", 1.5),
+    ("BENCH_decode.json", "op.hbm_savings_frac", "baseline_frac", 0.99),
+    # -- quant ladder: the w4a8 acceptance bar (deterministic traffic model) --
+    ("BENCH_decode.json", "quant.w4a8_vs_w8a8_model_tok_s_ratio", "min_abs", 1.5),
+    ("BENCH_decode.json", "quant.w4a8_vs_bf16_model_tok_s_ratio", "baseline_frac", 0.99),
+    # -- wall clock, wide band (catches artificial slowdowns, not runner skew) --
+    ("BENCH_decode.json", "engine.vectorized.tok_s", "baseline_frac", 0.2),
+    # -- paged KV cache: deterministic scheduler outcomes (seeded stream) --
+    ("BENCH_paged.json", "concurrent_requests.paged_vs_dense_ratio", "baseline_frac", 0.99),
+    ("BENCH_paged.json", "paged.shared_hits", "baseline_frac", 0.99),
+    ("BENCH_paged.json", "paged.pool_utilization_peak", "baseline_frac", 0.99),
+    ("BENCH_paged.json", "paged.tok_s", "baseline_frac", 0.2),
+]
+
+
+def _lookup(tree: dict, dotted: str):
+    node = tree
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node if isinstance(node, (int, float)) else None
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+def check(fresh_dir: str, baseline_dir: str) -> int:
+    failures = 0
+    fresh_cache: dict[str, dict | None] = {}
+    base_cache: dict[str, dict | None] = {}
+    for fname, metric, mode, param in CHECKS:
+        if fname not in fresh_cache:
+            fresh_cache[fname] = _load(os.path.join(fresh_dir, fname))
+            base_cache[fname] = _load(os.path.join(baseline_dir, fname))
+        fresh, base = fresh_cache[fname], base_cache[fname]
+        if fresh is None:
+            print(f"REGRESSION {fname}: missing/unreadable fresh file")
+            failures += 1
+            continue
+        got = _lookup(fresh, metric)
+        if got is None:
+            print(f"REGRESSION {fname}:{metric}: metric missing from fresh run")
+            failures += 1
+            continue
+        if mode == "min_abs":
+            ok, floor = got >= param, param
+        elif mode == "max_abs":
+            ok, floor = got <= param, param
+        else:  # baseline_frac
+            if base is None:
+                print(f"REGRESSION {fname}: missing baseline (commit one under "
+                      f"{baseline_dir}/)")
+                failures += 1
+                continue
+            want = _lookup(base, metric)
+            if want is None:
+                print(f"REGRESSION {fname}:{metric}: metric missing from baseline")
+                failures += 1
+                continue
+            floor = want * param
+            ok = got >= floor
+        status = "ok" if ok else "REGRESSION"
+        print(f"{status} {fname}:{metric} = {got:.4f} ({mode} bound {floor:.4f})")
+        if not ok:
+            failures += 1
+    if failures:
+        print(f"check_regression: {failures} failing check(s)")
+        return 1
+    print("check_regression: all checks passed")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default=".",
+                    help="where run.py --quick wrote BENCH_*.json")
+    ap.add_argument(
+        "--baseline-dir",
+        default=os.path.join(os.path.dirname(__file__), "baselines"),
+        help="committed baseline BENCH_*.json directory",
+    )
+    args = ap.parse_args()
+    return check(args.fresh_dir, args.baseline_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,18 @@
 """Per-kernel microbenchmark: correctness (interpret) + wall time (XLA path)
 across the paper's shape regimes, plus the VMEM/block report for each
-configuration (the structural profile used in §Perf)."""
+configuration (the structural profile used in §Perf).
+
+`--tune` is the registry's autotune pass: for every dispatch key
+(quant, phase, M-bucket, target) it measures the candidate kernel-block
+shapes on a representative shape and persists the winners to the checked-in
+tuned table (src/repro/kernels/tuned_table.json) that
+`repro.kernels.registry.select` consults at dispatch time.  On this CPU
+container the timings run interpret-mode Pallas — relative ordering between
+block shapes is directional; re-run --tune on real hardware to re-measure."""
 
 from __future__ import annotations
 
+import sys
 import time
 
 import jax
@@ -13,6 +22,7 @@ import numpy as np
 from repro.core import encoding, targets
 from repro.core.encoding import Phase
 from repro.kernels import ops, ref
+from repro.kernels import registry as registry_lib
 
 
 def _time(fn, *args, iters=3, warmup=1):
@@ -58,7 +68,6 @@ def main():
         t_ref = _time(f_ref, x, w_t)
 
         # structural: selected kernel blocks + VMEM footprint
-        tiles = encoding.select_tile_sizes(phase, lhs_dtype=jnp.float32, m_hint=m)
         n1, k1 = rhs4.shape[0], rhs4.shape[1]
         m0 = 128 if phase is not Phase.DECODE else min(8, m)
         kb = encoding.select_kernel_blocks(
@@ -98,5 +107,93 @@ def main():
     return rows
 
 
+# ---- registry autotune (kernel_bench --tune) --------------------------------
+
+# Representative live-row count per M-bucket (registry.m_bucket boundaries).
+_BUCKET_REPS = {"m1": 1, "m8": 8, "m64": 48, "big": 192}
+
+# Candidate kernel blocks (BM1, BN1, BK1) per phase kind.  Decode candidates
+# sweep the GEMV streaming width BN1; prefill candidates sweep the VMEM-
+# resident block.  All candidates divide the tune shape's tile counts.
+_DECODE_CANDIDATES = [(1, 1, 1), (1, 2, 1), (1, 4, 1), (1, 8, 1)]
+_PREFILL_CANDIDATES = [(1, 2, 1), (2, 2, 2), (1, 4, 2), (2, 8, 2)]
+
+
+def tune(out_path: str | None = None, *, iters: int = 2) -> str:
+    """Measure candidate tile/block shapes per dispatch key and persist the
+    winning table.  Returns the path written."""
+    target = targets.TPU_V5E
+    n, k = 1024, 256  # N1=8, K1=2: every candidate divides the tile counts
+    rng = np.random.RandomState(0)
+    w_t = jnp.asarray(rng.randn(n, k), jnp.float32)
+    packed = {
+        "none": (ops.pack_rhs(w_t),),
+        "w8a8": ops.pack_rhs_q8(w_t),
+        "w4a8": ops.pack_rhs_q4(w_t),
+    }
+
+    def run(quant, phase, m, backend, blocks):
+        # Measurement pins the POLICY backend explicitly — "auto" would read
+        # the very table being regenerated.
+        x = jnp.asarray(rng.randn(m, k), jnp.float32)
+        if quant == "none":
+            fn = lambda: ops.encoded_matmul(
+                x, packed[quant][0], n=n, phase=phase, backend=backend,
+                blocks=blocks, out_dtype=jnp.float32, interpret=True,
+            )
+        elif quant == "w8a8":
+            fn = lambda: ops.encoded_matmul_q8(
+                x, *packed[quant], n=n, phase=phase, backend=backend,
+                blocks=blocks, out_dtype=jnp.float32, interpret=True,
+            )
+        else:
+            fn = lambda: ops.encoded_matmul_q4(
+                x, *packed[quant], n=n, phase=phase, backend=backend,
+                blocks=blocks, out_dtype=jnp.float32, interpret=True,
+            )
+        return _time(fn, iters=iters, warmup=1)
+
+    entries = {}
+    for quant in registry_lib.QUANTS:
+        for phase in (Phase.DECODE, Phase.PREFILL):
+            cands = (
+                _DECODE_CANDIDATES if phase is Phase.DECODE else _PREFILL_CANDIDATES
+            )
+            buckets = ("m1", "m8", "m64") if phase is Phase.DECODE else (
+                "m64", "big"
+            )
+            for bucket in buckets:
+                m = _BUCKET_REPS[bucket]
+                key = registry_lib.dispatch_key(quant, phase, m, target.name)
+                # Backend comes from the static policy, NOT select(): select
+                # reads the existing tuned table, and copying its backend
+                # would let a stale entry survive every retune.
+                backend = registry_lib.default_backend(quant, phase)
+                best = None
+                for cand in cands:
+                    t = run(quant, phase, m, backend, cand)
+                    print(
+                        f"tune/{key}/blocks={cand[0]}x{cand[1]}x{cand[2]},"
+                        f"{t * 1e6:.1f},us"
+                    )
+                    if best is None or t < best[0]:
+                        best = (t, cand)
+                entries[key] = {
+                    "backend": backend,
+                    "blocks": list(best[1]),
+                    "us": round(best[0] * 1e6, 1),
+                    "shape_mnk": [m, n, k],
+                }
+    path = registry_lib.save_table({"entries": entries}, out_path)
+    print(f"tune/table_written,{len(entries)},{path}")
+    return path
+
+
 if __name__ == "__main__":
-    main()
+    if "--tune" in sys.argv[1:]:
+        out = None
+        if "--out" in sys.argv[1:]:
+            out = sys.argv[sys.argv.index("--out") + 1]
+        tune(out)
+    else:
+        main()

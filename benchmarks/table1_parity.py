@@ -65,7 +65,6 @@ def run(n_questions: int = 12, n_options: int = 4, seed: int = 0, arch: str = "l
     t0 = time.time()
     s_ref = _score_options(params_ref, cfg, enc_ref, prompts, options)
     s_mmt = _score_options(params_mmt, cfg, enc_mmt, prompts, options)
-    dt = time.time() - t0
 
     acc_ref = float(np.mean(s_ref.argmax(1) == answers))
     acc_mmt = float(np.mean(s_mmt.argmax(1) == answers))
@@ -78,6 +77,26 @@ def run(n_questions: int = 12, n_options: int = 4, seed: int = 0, arch: str = "l
         ("table1/argmax_agreement", agree),
         ("table1/max_abs_dloglik", max_dll),
     ]
+
+    # The paper's Llama.cpp Q4/Q8 columns: same suite through the quantized
+    # serving paths.  Quantization is lossy — the deliverable is decision
+    # agreement with the full-precision scorer, not bitwise logits.
+    for label, quant in (("w8a8", "int8"), ("w4a8", "int4")):
+        enc_q = EncodingConfig(enabled=True, backend="xla", weight_quant=quant)
+        params_q = T.model_init(jax.random.PRNGKey(seed), cfg, enc_q)
+        s_q = _score_options(params_q, cfg, enc_q, prompts, options)
+        rows.append(
+            (f"table1/acc_{label}", float(np.mean(s_q.argmax(1) == answers)))
+        )
+        rows.append((
+            f"table1/argmax_agreement_{label}",
+            float(np.mean(s_ref.argmax(1) == s_q.argmax(1))),
+        ))
+        rows.append(
+            (f"table1/max_abs_dloglik_{label}", float(np.max(np.abs(s_q - s_ref))))
+        )
+    dt = time.time() - t0
+
     derived = "PARITY" if (acc_ref == acc_mmt and agree == 1.0) else "MISMATCH"
     return rows, derived, dt
 

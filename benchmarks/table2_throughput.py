@@ -200,6 +200,7 @@ def decode_fastpath_bench(
     w_t = jnp.asarray(rng.randn(n, k), jnp.float32)
     rhs4 = ops.pack_rhs(w_t)
     rhs4_q, s_w = ops.pack_rhs_q8(w_t)
+    rhs4_p4, s_w4 = ops.pack_rhs_q4(w_t)
     iters = 1 if quick else 3
 
     def unfused(a):
@@ -250,6 +251,51 @@ def decode_fastpath_bench(
                 "q8_fused_vs_unfused_speedup", "hbm_bytes_saved",
                 "hbm_savings_frac"):
         rows.append((f"decode/op_{key}", op_stats[key]))
+
+    # --- quant ladder: bf16 vs w8a8 vs w4a8 at equal batch ---
+    # Wall-clock is interpret-mode-directional only; the decision row is the
+    # weight-stream roofline (deterministic TPU traffic model): decode re-reads
+    # every weight byte per token, so model tok/s ∝ 1/weight_stream_bytes.
+    def q4_fused(a):
+        return ops.encoded_matmul_q4(
+            a, rhs4_p4, s_w4, n=n, phase=Phase.DECODE, backend="fused",
+            out_dtype=jnp.float32, interpret=True,
+        )
+
+    t_q4f = _time(q4_fused, x, iters=iters, warmup=1)
+    group = ref.Q4_GROUP
+    stream = {
+        "bf16": encoding.quant_weight_stream_bytes(n, k, quant="none"),
+        "w8a8": encoding.quant_weight_stream_bytes(n, k, quant="w8a8"),
+        "w4a8": encoding.quant_weight_stream_bytes(
+            n, k, quant="w4a8", group=group,
+            scale_itemsize=jnp.dtype(s_w4.dtype).itemsize,
+        ),
+    }
+    model_tok_s = {
+        q: encoding.decode_weight_stream_tok_s(b) for q, b in stream.items()
+    }
+    quant_stats = {
+        "m": m, "n": n, "k": k, "group": group,
+        "q8_fused_us": op_stats["q8_fused_us"],
+        "q4_fused_us": t_q4f * 1e6,
+        "weight_stream_bytes": stream,
+        "model_tok_s": model_tok_s,
+        "w4a8_vs_w8a8_model_tok_s_ratio": (
+            model_tok_s["w4a8"] / model_tok_s["w8a8"]
+        ),
+        "w4a8_vs_bf16_model_tok_s_ratio": (
+            model_tok_s["w4a8"] / model_tok_s["bf16"]
+        ),
+    }
+    result["quant"] = quant_stats
+    rows.append(("decode/quant_w4a8_model_tok_s", model_tok_s["w4a8"]))
+    rows.append(("decode/quant_w8a8_model_tok_s", model_tok_s["w8a8"]))
+    rows.append((
+        "decode/quant_w4a8_vs_w8a8_tok_s_ratio",
+        quant_stats["w4a8_vs_w8a8_model_tok_s_ratio"],
+    ))
+    rows.append(("decode/quant_w4a8_fused_us", quant_stats["q4_fused_us"]))
 
     with open(out_json, "w") as f:
         json.dump(result, f, indent=2)

@@ -9,7 +9,9 @@ worst-case-reservation baseline).
       --block-size 8 --pool-pages 24   # force pool pressure -> preemption
 """
 
-import sys, os
+import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse
@@ -19,6 +21,7 @@ import jax
 import numpy as np
 
 from repro.configs import registry
+from repro.core import encoding
 from repro.core.packed import EncodingConfig
 from repro.models import transformer as T
 from repro.serving import engine as engine_lib
@@ -31,10 +34,19 @@ ap.add_argument("--cache-mode", choices=("paged", "dense"), default="paged")
 ap.add_argument("--block-size", type=int, default=16)
 ap.add_argument("--pool-pages", type=int, default=None,
                 help="paged pool size; small values force preemption")
+ap.add_argument("--quant", choices=("none", "w8a8", "w4a8"), default="none",
+                help="serving weight format: w8a8 = int8 per-channel, "
+                     "w4a8 = group int4 (kernels/mmt4d_q4.py)")
+ap.add_argument("--quant-group", type=int, default=16,
+                help="w4a8 K-group size (16 default; 32 = llama.cpp Q4_0)")
 args = ap.parse_args()
 
 cfg = registry.get_reduced("llama3.2-1b")
-enc = EncodingConfig(enabled=True, backend="xla")
+WEIGHT_QUANT = {"none": "none", "w8a8": "int8", "w4a8": "int4"}[args.quant]
+enc = EncodingConfig(
+    enabled=True, backend="xla", weight_quant=WEIGHT_QUANT,
+    quant_group=args.quant_group,
+)
 params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
 eng = engine_lib.Engine(
     params, cfg, enc, slots=args.slots, max_seq=96,
@@ -61,6 +73,18 @@ total = sum(len(r.generated) for r in eng.finished)
 print(f"served {len(eng.finished)} requests / {total} tokens "
       f"in {dt:.2f}s over {steps} engine steps ({total/dt:.2f} tok/s)")
 stats = eng.stats
+if args.quant != "none":
+    # Decode weight-stream roofline: aggregate projection bytes per token at
+    # this quant mode vs bf16 (encoding.quant_weight_stream_bytes; the scale
+    # term aggregates exactly because every projection K divides the group).
+    p = cfg.param_count()
+    wq = encoding.quant_weight_stream_bytes(
+        1, p, quant=args.quant, group=args.quant_group
+    )
+    wfp = encoding.quant_weight_stream_bytes(1, p, quant="none")
+    print(f"  quant={args.quant} (group={args.quant_group}): "
+          f"{wq / p:.3f} bytes/weight streamed per decode token "
+          f"({wfp / wq:.2f}x less than bf16 -> projected tok/s uplift)")
 if stats["cache_mode"] == "paged":
     print(f"  paged: peak_active={stats['peak_active']} "
           f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "

@@ -9,7 +9,8 @@ decrease.
   PYTHONPATH=src python examples/train_100m.py [--steps 300]
 """
 
-import sys, os
+import os
+import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import argparse

@@ -175,6 +175,42 @@ def decode_projection_hbm_bytes(
     }
 
 
+def quant_weight_stream_bytes(
+    n: int,
+    k: int,
+    *,
+    quant: str = "none",
+    weight_itemsize: int = 2,
+    group: int = 16,
+    scale_itemsize: int = 2,
+) -> int:
+    """Bytes one decode step streams for a W (n, k) projection, per quant mode.
+
+    This is THE decode roofline term (the weight is read once per token):
+      none : n*k*weight_itemsize                        (bf16: 2 bytes/weight)
+      w8a8 : n*k + n*4                                  (int8 + per-channel f32)
+      w4a8 : n*k/2 + n*ceil(k/group)*scale_itemsize     (nibbles + group scales)
+    With bf16 scales and g=16, w4a8 streams 0.625 bytes/weight — 1.6x less
+    than w8a8 and 3.2x less than bf16; the model-projected decode tokens/s
+    scale inversely (see decode_weight_stream_tok_s and docs/PERF.md)."""
+    if quant in ("none",):
+        return n * k * weight_itemsize
+    if quant in ("w8a8", "int8"):
+        return n * k + n * 4
+    if quant in ("w4a8", "int4"):
+        return n * (k // 2) + n * math.ceil(k / group) * scale_itemsize
+    raise ValueError(f"unknown quant mode {quant!r}")
+
+
+def decode_weight_stream_tok_s(
+    weight_bytes: int, target: targets_lib.TargetSpec = targets_lib.TPU_V5E
+) -> float:
+    """Upper-bound decode tokens/s from the weight-streaming roofline: every
+    generated token re-reads `weight_bytes` from HBM; nothing else scales
+    with the token count in the bandwidth-bound regime."""
+    return target.hbm_bytes_per_s / max(1, weight_bytes)
+
+
 def kv_bytes_per_token(
     num_layers: int, num_kv_heads: int, head_dim: int, *, itemsize: int = 2
 ) -> int:

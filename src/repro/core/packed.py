@@ -36,8 +36,12 @@ class EncodingConfig:
     # Pad packed tile counts to divide the mesh axes (16 in production).
     shard_multiple: int = 1
     # Serving weight quantization: "none" | "int8" (w8a8, per-channel/per-row
-    # scales — beyond-paper, kernels/mmt4d_q8.py).  Serving only.
+    # scales — kernels/mmt4d_q8.py) | "int4" (w4a8, per-K-group scales,
+    # nibble-packed — kernels/mmt4d_q4.py).  Serving only.
     weight_quant: str = "none"
+    # K elements per int4 scale group (weight_quant="int4" only).  Smaller
+    # groups buy accuracy with more scale bytes — see docs/PERF.md.
+    quant_group: int = 16
     # Cross-shard reduction dtype for contracting-dim-sharded matmuls:
     # "bfloat16" halves the partial-sum all-reduce bytes (in-shard MXU
     # accumulation stays f32; only the K-shard partials are rounded).
@@ -68,7 +72,13 @@ def linear_init(
     w_t = scale * jax.random.normal(key, (out_dim, in_dim), dtype=jnp.float32)
     w_t = w_t.astype(dtype)
     params = {}
-    if enc.enabled and enc.weight_quant == "int8":
+    if enc.enabled and enc.weight_quant == "int4":
+        w_q4, s_w4 = ops.pack_rhs_q4(
+            w_t, group=enc.quant_group, shard_multiple=enc.shard_multiple
+        )
+        params["w_q4"] = w_q4
+        params["w_scale4"] = s_w4
+    elif enc.enabled and enc.weight_quant == "int8":
         w_q, s_w = ops.pack_rhs_q8(w_t, shard_multiple=enc.shard_multiple)
         params["w_q"] = w_q
         params["w_scale"] = s_w
@@ -93,18 +103,34 @@ def linear_apply(
     out_dtype: Any = None,
 ) -> jnp.ndarray:
     out_dtype = out_dtype or x.dtype
-    import jax.numpy as _jnp
-    acc_dtype = _jnp.float32
-    if enc.reduce_dtype == "bfloat16" and x.dtype == _jnp.bfloat16:
-        acc_dtype = _jnp.bfloat16
-    if "w_q" in params:
+    acc_dtype = jnp.float32
+    if enc.reduce_dtype == "bfloat16" and x.dtype == jnp.bfloat16:
+        acc_dtype = jnp.bfloat16
+    quant_backend = (
+        enc.backend if enc.backend in ("pallas", "fused", "auto") else "xla"
+    )
+    if "w_q4" in params:
+        y = ops.encoded_matmul_q4(
+            x,
+            params["w_q4"],
+            params["w_scale4"],
+            n=n,
+            phase=phase,
+            group=enc.quant_group,
+            backend=quant_backend,
+            target=enc.target,
+            out_dtype=out_dtype,
+            interpret=enc.interpret,
+        )
+    elif "w_q" in params:
         y = ops.encoded_matmul_q8(
             x,
             params["w_q"],
             params["w_scale"],
             n=n,
             phase=phase,
-            backend=enc.backend if enc.backend in ("pallas", "fused") else "xla",
+            backend=quant_backend,
+            target=enc.target,
             out_dtype=out_dtype,
             interpret=enc.interpret,
         )
@@ -132,7 +158,8 @@ def linear_apply(
 
 
 def linear_out_dim(params: dict) -> int:
-    if "w_packed" in params:
-        n1, _, n0, _ = params["w_packed"].shape
-        return n1 * n0  # padded; callers pass the true `n` to linear_apply
+    for key in ("w_packed", "w_q", "w_q4"):
+        if key in params:
+            n1, _, n0, _ = params[key].shape
+            return n1 * n0  # padded; callers pass the true `n` to linear_apply
     return params["w_t"].shape[0]

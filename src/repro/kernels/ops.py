@@ -42,13 +42,17 @@ from repro.kernels import fused_gemv as fused_gemv_lib
 from repro.kernels import fused_pack_mmt4d as fused_lib
 from repro.kernels import mmt4d as mmt4d_lib
 from repro.kernels import mmt4d_gemv as gemv_lib
+from repro.kernels import mmt4d_q4 as q4_lib
 from repro.kernels import mmt4d_q8 as q8_lib
 from repro.kernels import pack as pack_lib
 from repro.kernels import ref
+from repro.kernels import registry
 
 Phase = encoding.Phase
 
-BACKENDS = ("reference", "xla", "pallas", "fused")
+# "auto" defers backend choice to the dispatch registry (kernels/registry.py):
+# tuned table first, static policy second, reference fallback on unknown keys.
+BACKENDS = ("reference", "xla", "pallas", "fused", "auto")
 
 # Row ceiling for the fused decode GEMV: the full (M, K) activation block stays
 # VMEM-resident across the whole grid, so M is bounded by the live decode slots
@@ -140,6 +144,11 @@ def encoded_matmul(
     lead = x.shape[:-1]
     x2d = x.reshape(-1, k)
     m = x2d.shape[0]
+    choice = registry.select(
+        quant="none", phase=phase, m=m, target=target,
+        requested=backend, blocks=blocks,
+    )
+    backend, blocks = choice.backend, choice.blocks
     if k != k1 * k0:  # K padding lives in the packed weight; mirror it on lhs.
         x2d = jnp.pad(x2d, ((0, 0), (0, k1 * k0 - k)))
 
@@ -179,13 +188,16 @@ def encoded_matmul(
             # VMEM can't hold the resident row block even at bn1=1:
             # fall through to the 128-row GEMM slab path below.
         xp = _pad_rows(x2d, 128)
-        bm1 = _largest_divisor_leq(xp.shape[0] // 128, 4)
-        bn1 = _largest_divisor_leq(n1, 2)
-        bk1 = _largest_divisor_leq(k1, 4)
+        want = blocks if blocks is not None else (4, 2, 4)
+        # Clamp to divisors of this shape's tile counts: tuned/explicit blocks
+        # are measured on representative shapes and must stay legal everywhere.
+        bm1 = _largest_divisor_leq(xp.shape[0] // 128, want[0])
+        bn1 = _largest_divisor_leq(n1, want[1])
+        bk1 = _largest_divisor_leq(k1, want[2])
         out2d = fused_lib.fused_pack_mmt4d_pallas(
             xp,
             rhs4,
-            blocks=(bm1, bn1, bk1) if blocks is None else blocks,
+            blocks=(bm1, bn1, bk1),
             out_dtype=jnp.float32,
             interpret=interpret,
         )
@@ -246,6 +258,7 @@ def _fused_gemv_plan(
     rhs_itemsize: int,
     want_bn1: int,
     target: targets_lib.TargetSpec,
+    per_tile_bytes: int | None = None,
 ) -> int | None:
     """VMEM-feasible bn1 for the fused GEMV, or None when none fits.
 
@@ -253,11 +266,15 @@ def _fused_gemv_plan(
     fused kernel keeps the full (rows, K) activation block and an
     (rows, bn1*N0) f32 output slab resident alongside each streamed weight
     tile — all three must fit the kernel's half-VMEM budget (the other half
-    is double-buffering headroom for the weight stream).
+    is double-buffering headroom for the weight stream).  `per_tile_bytes`
+    overrides the dense-rhs tile footprint for formats whose streamed bytes
+    are not k1*n0*k0*itemsize (the nibble-packed w4a8 tile + its scales).
     """
     budget = target.vmem_bytes // 2
     lhs_bytes = rows * k1 * k0 * lhs_itemsize
-    per_tile = k1 * n0 * k0 * rhs_itemsize
+    per_tile = (
+        per_tile_bytes if per_tile_bytes is not None else k1 * n0 * k0 * rhs_itemsize
+    )
 
     def fits(bn1: int) -> bool:
         return lhs_bytes + bn1 * per_tile + rows * bn1 * n0 * 4 <= budget
@@ -311,6 +328,8 @@ def encoded_matmul_q8(
     n: int,
     phase: Phase,
     backend: str = "xla",
+    blocks: tuple[int, int, int] | None = None,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
     out_dtype: Any = None,
     interpret: bool | None = None,
 ) -> jnp.ndarray:
@@ -327,19 +346,28 @@ def encoded_matmul_q8(
     lead = x.shape[:-1]
     x2d = x.reshape(-1, k)
     m = x2d.shape[0]
+    choice = registry.select(
+        quant="w8a8", phase=phase, m=m, target=target,
+        requested=backend, blocks=blocks,
+    )
+    backend, blocks = choice.backend, choice.blocks
     if k != k1 * k0:
         x2d = jnp.pad(x2d, ((0, 0), (0, k1 * k0 - k)))
     xq, s_a = ref.quantize_rows(x2d)
 
     if backend == "fused" and phase is Phase.DECODE and m <= _FUSED_GEMV_MAX_ROWS:
-        sub = targets_lib.sublanes_for_dtype(targets_lib.TPU_V5E, 1)
+        sub = targets_lib.sublanes_for_dtype(target, 1)
         xqp = _pad_rows(xq, sub)
         rows = xqp.shape[0]
         bn1 = _fused_gemv_plan(
             rows=rows, n1=n1, k1=k1, n0=n0, k0=k0,
             lhs_itemsize=1, rhs_itemsize=1,
-            want_bn1=_gemv_bn1(n0, k0, k1, targets_lib.TPU_V5E, 1),
-            target=targets_lib.TPU_V5E,
+            want_bn1=(
+                _gemv_bn1(n0, k0, k1, target, 1)
+                if blocks is None
+                else blocks[1]
+            ),
+            target=target,
         )
         if bn1 is not None:
             sa2 = jnp.zeros((rows, 1), jnp.float32).at[:m, 0].set(s_a)
@@ -349,7 +377,7 @@ def encoded_matmul_q8(
             return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
         # No VMEM-feasible fused plan: fall through to the packed q8 path.
 
-    m0 = _select_m0(phase, jnp.int8, m, targets_lib.TPU_V5E)
+    m0 = _select_m0(phase, jnp.int8, m, target)
     xq = _pad_rows(xq, m0)
     m1 = xq.shape[0] // m0
     lhs4 = ref.pack(xq, (m0, k0))
@@ -359,14 +387,140 @@ def encoded_matmul_q8(
     if backend in ("pallas", "fused"):
         # "fused" outside the GEMV regime (prefill, big M, VMEM-infeasible)
         # still runs the packed Pallas q8 kernel, not the reference einsum.
-        bm1 = _largest_divisor_leq(m1, 4)
-        bn1 = _largest_divisor_leq(n1, 4)
-        bk1 = _largest_divisor_leq(k1, 4)
+        want = blocks if blocks is not None else (4, 4, 4)
+        bm1 = _largest_divisor_leq(m1, want[0])
+        bn1 = _largest_divisor_leq(n1, want[1])
+        bk1 = _largest_divisor_leq(k1, want[2])
         out4 = q8_lib.mmt4d_q8_pallas(
             lhs4, rhs4_q, sa2, s_w, blocks=(bm1, bn1, bk1), interpret=interpret
         )
     else:
         out4 = ref.mmt4d_q8(lhs4, rhs4_q, sa2, s_w)
+    out2d = ref.unpack(out4, (xq.shape[0], n1 * n0))
+    return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
+
+
+# ---- int4 group-quantized serving path (w4a8) ------------------------------
+
+
+def pack_rhs_q4(
+    w_t: jnp.ndarray,
+    *,
+    group: int = ref.Q4_GROUP,
+    shard_multiple: int = 1,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Group-quantize + pack a transposed weight (N, K) for the w4a8 path.
+
+    Returns (rhs4_p (N1, K1, N0, K0/2) uint8 nibble-packed,
+             s_w4 (N1, K1, N0, K0/group) f32 per-group scales).
+
+    Quantization is per-(row, K-group) int4 with MSE-clip search (one-time
+    load cost); the scales tensor mirrors the weight's tile structure so the
+    kernels stream matching blocks.  Padded rows/columns carry zero scales
+    and zero nibbles — their dequant is exactly 0."""
+    assert 128 % group == 0, group  # groups must tile K0
+    q, s = ref.quantize_rows_q4_grouped(w_t, group=group)
+    tiles = encoding.select_tile_sizes(encoding.Phase.PREFILL)
+    n0, k0 = tiles.n0, tiles.k0
+    rhs4 = ref.pack(q, (n0, k0))          # (N1, K1, N0, K0) int8
+    # Scales ship bf16: the scale stream is pure HBM overhead at decode and a
+    # bf16 scale's rounding (<0.4% of the scale) is noise next to int4 error.
+    s_w4 = ref.pack(s, (n0, k0 // group)).astype(jnp.bfloat16)
+    if shard_multiple > 1:
+        n1, k1, _, _ = rhs4.shape
+        pn = (-n1) % shard_multiple
+        pk = (-k1) % shard_multiple
+        if pn or pk:
+            rhs4 = jnp.pad(rhs4, ((0, pn), (0, pk), (0, 0), (0, 0)))
+            s_w4 = jnp.pad(s_w4, ((0, pn), (0, pk), (0, 0), (0, 0)))
+    return ref.pack_nibbles(rhs4), s_w4
+
+
+def encoded_matmul_q4(
+    x: jnp.ndarray,
+    rhs4_p: jnp.ndarray,
+    s_w4: jnp.ndarray,
+    *,
+    n: int,
+    phase: Phase,
+    group: int = ref.Q4_GROUP,
+    backend: str = "xla",
+    blocks: tuple[int, int, int] | None = None,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
+    out_dtype: Any = None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """w4a8 encoded matmul: dynamic per-row int8 activation quant, nibble-
+    packed int4 weights with per-group scales (kernels/mmt4d_q4.py).
+
+    The per-K-group scale rides inside the contraction (dequant fused into
+    the kernel, per streamed tile); only the activation's per-row scale
+    factors into the epilogue.  backend="fused" at decode is the
+    pack/unpack-free GEMV; "pallas" (or fused outside the GEMV regime) is
+    the blocked packed kernel; "xla" is the ref.mmt4d_q4 oracle."""
+    interpret = targets_lib.resolve_interpret(interpret)
+    out_dtype = out_dtype or x.dtype
+    n1, k1, n0, k0p = rhs4_p.shape
+    k0 = 2 * k0p
+    k = x.shape[-1]
+    lead = x.shape[:-1]
+    x2d = x.reshape(-1, k)
+    m = x2d.shape[0]
+    choice = registry.select(
+        quant="w4a8", phase=phase, m=m, target=target,
+        requested=backend, blocks=blocks,
+    )
+    backend, blocks = choice.backend, choice.blocks
+    if k != k1 * k0:
+        x2d = jnp.pad(x2d, ((0, 0), (0, k1 * k0 - k)))
+    xq, s_a = ref.quantize_rows(x2d)
+
+    # Streamed w4 tile: nibble bytes + group-scale bytes (not a dense tile).
+    scale_itemsize = jnp.dtype(s_w4.dtype).itemsize
+    q4_tile_bytes = k1 * n0 * (k0p + (k0 // group) * scale_itemsize)
+
+    if backend == "fused" and phase is Phase.DECODE and m <= _FUSED_GEMV_MAX_ROWS:
+        sub = targets_lib.sublanes_for_dtype(target, 1)
+        xqp = _pad_rows(xq, sub)
+        rows = xqp.shape[0]
+        bn1 = _fused_gemv_plan(
+            rows=rows, n1=n1, k1=k1, n0=n0, k0=k0,
+            lhs_itemsize=1, rhs_itemsize=1,
+            want_bn1=(
+                _gemv_bn1(n0, k0, k1, target, 1)
+                if blocks is None
+                else blocks[1]
+            ),
+            target=target,
+            per_tile_bytes=q4_tile_bytes,
+        )
+        if bn1 is not None:
+            sa2 = jnp.zeros((rows, 1), jnp.float32).at[:m, 0].set(s_a)
+            out2d = q4_lib.fused_gemv_q4_pallas(
+                xqp, rhs4_p, sa2, s_w4, bn1=bn1, group=group,
+                interpret=interpret,
+            )
+            return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
+        # No VMEM-feasible fused plan: fall through to the packed q4 path.
+
+    m0 = _select_m0(phase, jnp.int8, m, target)
+    xq = _pad_rows(xq, m0)
+    m1 = xq.shape[0] // m0
+    lhs4 = ref.pack(xq, (m0, k0))
+    sa_pad = jnp.zeros((m1 * m0,), jnp.float32).at[:m].set(s_a)
+    sa2 = sa_pad.reshape(m1, m0)
+
+    if backend in ("pallas", "fused"):
+        want = blocks if blocks is not None else (4, 4, 4)
+        bm1 = _largest_divisor_leq(m1, want[0])
+        bn1 = _largest_divisor_leq(n1, want[1])
+        bk1 = _largest_divisor_leq(k1, want[2])
+        out4 = q4_lib.mmt4d_q4_pallas(
+            lhs4, rhs4_p, sa2, s_w4, blocks=(bm1, bn1, bk1), group=group,
+            interpret=interpret,
+        )
+    else:
+        out4 = ref.mmt4d_q4(lhs4, rhs4_p, sa2, s_w4, group=group)
     out2d = ref.unpack(out4, (xq.shape[0], n1 * n0))
     return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
 
@@ -379,6 +533,8 @@ mmt4d_gemv_pallas = gemv_lib.mmt4d_gemv_pallas
 fused_pack_mmt4d_pallas = fused_lib.fused_pack_mmt4d_pallas
 fused_gemv_pallas = fused_gemv_lib.fused_gemv_pallas
 fused_gemv_q8_pallas = fused_gemv_lib.fused_gemv_q8_pallas
+fused_gemv_q4_pallas = q4_lib.fused_gemv_q4_pallas
+mmt4d_q4_pallas = q4_lib.mmt4d_q4_pallas
 
 
 @functools.lru_cache(maxsize=None)

@@ -119,3 +119,98 @@ def mmt4d_q8(lhs4_q, rhs4_q, s_a, s_w) -> jnp.ndarray:
         rhs4_q.astype(jnp.int32),
     ).astype(jnp.float32)
     return acc * s_a[:, None, :, None] * s_w[None, :, None, :]
+
+
+# ---- int4 group-quantized serving (w4a8; kernels/mmt4d_q4.py) --------------
+
+# K elements sharing one int4 scale.  16 is the serving default: on the
+# reduced-model decision-preservation harness it halves the logit MSE of the
+# llama.cpp-Q4_0-style g=32 (rel MSE 0.035 vs 0.078) for +1/16 scale byte per
+# weight (bf16 scales) — see docs/PERF.md for the measured trade-off curve.
+Q4_GROUP = 16
+
+
+def quantize_rows_q4_grouped(
+    x2d: jnp.ndarray,
+    group: int = Q4_GROUP,
+    ratios: tuple[float, ...] = _CLIP_RATIOS,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-(row, K-group) int4 with MSE-optimal clipping.
+
+    Returns (q (R, C) int8 in [-7, 7], scales (R, ceil(C/group)) f32).  A
+    per-group scale is the whole point of 4-bit: one outlier only costs its
+    own `group` neighbours resolution, not the full row.  C is zero-padded to
+    a group multiple internally; padded columns quantize to 0 and never
+    contribute (their dequant is 0 * scale)."""
+    r, c = x2d.shape
+    gcount = math.ceil(c / group)
+    cp = gcount * group
+    xf = jnp.pad(x2d.astype(jnp.float32), ((0, 0), (0, cp - c)))
+    xg = xf.reshape(r, gcount, group)
+    amax = jnp.maximum(jnp.max(jnp.abs(xg), axis=2), 1e-8)  # (R, G)
+    best_err = best_q = best_s = None
+    for ratio in ratios:
+        s = amax * (ratio / 7.0)
+        q = jnp.clip(jnp.round(xg / s[..., None]), -7, 7)
+        err = jnp.sum(jnp.square(q * s[..., None] - xg), axis=2)
+        if best_err is None:
+            best_err, best_q, best_s = err, q, s
+        else:
+            upd = err < best_err
+            best_q = jnp.where(upd[..., None], q, best_q)
+            best_s = jnp.where(upd, s, best_s)
+            best_err = jnp.minimum(err, best_err)
+    q2d = best_q.reshape(r, cp)[:, :c].astype(jnp.int8)
+    return q2d, best_s
+
+
+def pack_nibbles(q: jnp.ndarray) -> jnp.ndarray:
+    """int4-valued int8 (..., C) -> uint8 (..., C/2), two's-complement nibbles.
+
+    Byte j holds elements (2j, 2j+1): low nibble = even index.  C must be
+    even (the packed K0 tile is 128, always even)."""
+    assert q.shape[-1] % 2 == 0, q.shape
+    qi = q.astype(jnp.int32) & 0xF
+    lo = qi[..., 0::2]
+    hi = qi[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(b: jnp.ndarray) -> jnp.ndarray:
+    """uint8 (..., P) -> int32 in [-8, 7] (..., 2P), inverse of pack_nibbles."""
+    bi = b.astype(jnp.int32)
+    lo = ((bi & 0xF) ^ 8) - 8
+    hi = ((bi >> 4) ^ 8) - 8
+    return jnp.stack([lo, hi], axis=-1).reshape(*b.shape[:-1], 2 * b.shape[-1])
+
+
+def dequant_rhs4_q4(
+    rhs4_p: jnp.ndarray, s_w4: jnp.ndarray, group: int = Q4_GROUP
+) -> jnp.ndarray:
+    """Nibble-packed rhs (N1, K1, N0, K0/2) + scales (N1, K1, N0, K0/group)
+    -> f32 (N1, K1, N0, K0): the dequantized packed weight."""
+    w = unpack_nibbles(rhs4_p).astype(jnp.float32)
+    n1, k1, n0, k0 = w.shape
+    s = jnp.broadcast_to(
+        s_w4.astype(jnp.float32)[..., :, None], (*s_w4.shape, group)
+    ).reshape(n1, k1, n0, k0)
+    return w * s
+
+
+def mmt4d_q4(lhs4_q, rhs4_p, s_a, s_w4, group: int = Q4_GROUP) -> jnp.ndarray:
+    """Oracle for kernels/mmt4d_q4.py: w4a8 mmt4d on packed operands.
+
+    lhs4_q (M1, K1, M0, K0) int8 activations + per-row scales s_a (M1, M0);
+    rhs4_p nibble-packed int4 weights + per-group scales s_w4 (see
+    dequant_rhs4_q4).  The per-K-group weight scale cannot factor out of the
+    contraction (unlike w8a8's per-channel scale), so the weight dequantizes
+    into f32 *inside* the contraction domain and accumulation is f32 — the
+    products are exact in f32 (|a_q| <= 127, |w_q| <= 7)."""
+    w = dequant_rhs4_q4(rhs4_p, s_w4, group)
+    acc = jnp.einsum(
+        "mkac,nkbc->mnab",
+        lhs4_q.astype(jnp.float32),
+        w,
+        preferred_element_type=jnp.float32,
+    )
+    return acc * s_a[:, None, :, None]

@@ -1,0 +1,201 @@
+"""Unified microkernel dispatch registry — the analogue of IREE's ukernel
+selection boundary (TinyIREE's "clean selection/deployment seam").
+
+Every encoded matmul used to pick its implementation through scattered
+`backend="fused"/"pallas"/"q8"` branching in ops.py call sites.  This module
+centralizes the decision behind one key:
+
+    (quant mode, phase, M-bucket, target name)  ->  KernelChoice(backend, blocks)
+
+* quant mode : "none" (bf16/f32), "w8a8" (int8), "w4a8" (group int4)
+* M-bucket   : live-row regime — "m1" (pure GEMV), "m8" (decode slots),
+               "m64" (skinny GEMM), "big" (prefill slab); buckets keep the
+               table finite while still separating the paper's two regimes.
+* target     : TargetSpec.name from core/targets.py
+
+Resolution order (select()):
+  1. an explicit `requested` backend always wins (tests/benches pin paths);
+  2. a tuned-table entry for the key (blocks measured by
+     `benchmarks/kernel_bench.py --tune`, persisted to the checked-in
+     tuned_table.json next to this file);
+  3. the static default policy (the routing ops.py used to hard-code);
+  4. unknown key (unrecognized quant/phase/target): the reference path —
+     dispatch must never crash on a target it has no data for.
+
+The tuned table stores only data (backend name + kernel blocks), never code:
+deployment-time dispatch is a dict lookup, and re-tuning is a JSON diff.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Any
+
+from repro.core import encoding
+from repro.core import targets as targets_lib
+
+Phase = encoding.Phase
+
+QUANTS = ("none", "w8a8", "w4a8")
+M_BUCKETS = ("m1", "m8", "m64", "big")
+
+# Backends each quant mode understands (ops.py contract).  "auto" is the
+# registry sentinel, resolved here and never passed to a kernel.
+BACKENDS_BY_QUANT = {
+    "none": ("reference", "xla", "pallas", "fused"),
+    "w8a8": ("xla", "pallas", "fused"),
+    "w4a8": ("xla", "pallas", "fused"),
+}
+
+# The no-data escape hatch per quant mode.  For quantized modes "xla" IS the
+# reference oracle (ref.mmt4d_q8 / ref.mmt4d_q4 on the packed operands).
+FALLBACK_BACKEND = {"none": "reference", "w8a8": "xla", "w4a8": "xla"}
+
+DEFAULT_TABLE_PATH = os.path.join(os.path.dirname(__file__), "tuned_table.json")
+
+_TABLE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelChoice:
+    """One resolved dispatch decision."""
+
+    backend: str
+    blocks: tuple[int, int, int] | None = None  # (BM1, BN1, BK1); GEMV uses BN1
+    source: str = "default"  # "requested" | "tuned" | "default" | "fallback"
+
+
+def m_bucket(m: int) -> str:
+    if m <= 1:
+        return "m1"
+    if m <= 8:
+        return "m8"
+    if m <= 64:
+        return "m64"
+    return "big"
+
+
+def dispatch_key(quant: str, phase: Phase, m: int, target_name: str) -> str:
+    return f"{quant}|{phase.value}|{m_bucket(m)}|{target_name}"
+
+
+def default_backend(quant: str, phase: Phase) -> str:
+    """The static policy — the routing formerly hard-coded across ops.py.
+
+    Decode always takes the fused path (pack/unpack-free, the bandwidth
+    regime's win); prefill takes the fused GEMM slab for unquantized weights
+    and the packed Pallas kernel for quantized ones (their fused slab does
+    not exist — the packed kernel already streams int operands).
+
+    This is also what `kernel_bench --tune` records as each entry's backend:
+    retuning re-measures blocks against the POLICY backend, never copying a
+    backend out of the table being regenerated (a stale entry must not
+    self-perpetuate across retunes)."""
+    if phase is Phase.DECODE:
+        return "fused"
+    return "fused" if quant == "none" else "pallas"
+
+
+def _known_key(quant: str, phase: Phase, target_name: str) -> bool:
+    known_targets = {targets_lib.TPU_V5E.name, targets_lib.RISCV_VLEN256.name}
+    return quant in QUANTS and isinstance(phase, Phase) and target_name in known_targets
+
+
+# ---- tuned-table persistence ------------------------------------------------
+
+_table_cache: dict[str, dict] = {}
+
+
+def load_table(path: str | None = None) -> dict:
+    """Load (and cache) a tuned table.  Missing/corrupt file -> empty table:
+    dispatch falls back to the static policy rather than failing."""
+    path = path or DEFAULT_TABLE_PATH
+    if path in _table_cache:
+        return _table_cache[path]
+    table: dict[str, Any] = {"version": _TABLE_VERSION, "entries": {}}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if isinstance(raw, dict) and raw.get("version") == _TABLE_VERSION:
+            entries = raw.get("entries", {})
+            if isinstance(entries, dict):
+                table = {"version": _TABLE_VERSION, "entries": entries}
+    except (OSError, ValueError):
+        pass
+    _table_cache[path] = table
+    return table
+
+
+def save_table(table: dict, path: str | None = None) -> str:
+    """Persist a tuned table (sorted keys — stable diffs) and refresh the
+    cache.  Returns the path written."""
+    path = path or DEFAULT_TABLE_PATH
+    out = {
+        "version": _TABLE_VERSION,
+        "entries": dict(sorted(table.get("entries", {}).items())),
+    }
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    _table_cache[path] = out
+    return path
+
+
+def clear_cache() -> None:
+    """Drop cached tables (tests swap table files underneath the registry)."""
+    _table_cache.clear()
+
+
+def _tuned_entry(key: str, path: str | None) -> dict | None:
+    entry = load_table(path)["entries"].get(key)
+    return entry if isinstance(entry, dict) else None
+
+
+# ---- the one resolution function -------------------------------------------
+
+
+def select(
+    *,
+    quant: str,
+    phase: Phase,
+    m: int,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
+    requested: str | None = None,
+    blocks: tuple[int, int, int] | None = None,
+    table_path: str | None = None,
+) -> KernelChoice:
+    """Resolve one dispatch.  `requested` is the caller's backend= argument:
+    "auto"/None defer to the registry; anything else is honoured verbatim
+    (still picking up tuned blocks when the caller passed none)."""
+    key = dispatch_key(quant, phase, m, getattr(target, "name", str(target)))
+    entry = _tuned_entry(key, table_path)
+    tuned_blocks = None
+    if entry is not None and isinstance(entry.get("blocks"), (list, tuple)):
+        b = entry["blocks"]
+        if len(b) == 3 and all(isinstance(v, int) and v >= 1 for v in b):
+            tuned_blocks = (b[0], b[1], b[2])
+    resolved_blocks = blocks if blocks is not None else tuned_blocks
+
+    valid = BACKENDS_BY_QUANT.get(quant, ())
+    if requested not in (None, "auto"):
+        # An explicit backend is a caller decision: a name this quant mode
+        # does not understand is a bug at the call site, not a routing
+        # question — fail loudly instead of silently running the oracle.
+        if requested not in valid:
+            raise ValueError(
+                f"backend {requested!r} is not valid for quant={quant!r} "
+                f"(valid: {valid}); use 'auto' for registry routing"
+            )
+        return KernelChoice(requested, resolved_blocks, "requested")
+
+    if not _known_key(quant, phase, getattr(target, "name", str(target))):
+        return KernelChoice(
+            FALLBACK_BACKEND.get(quant, "reference"), None, "fallback"
+        )
+
+    if entry is not None and entry.get("backend") in valid:
+        return KernelChoice(entry["backend"], resolved_blocks, "tuned")
+
+    return KernelChoice(default_backend(quant, phase), resolved_blocks, "default")

@@ -247,6 +247,8 @@ def main():
     ap.add_argument("--moe-dense-decode", action="store_true")
     ap.add_argument("--quant-int8", action="store_true",
                     help="int8 w8a8 serving weights (decode/prefill cells)")
+    ap.add_argument("--quant-int4", action="store_true",
+                    help="group int4 w4a8 serving weights (kernels/mmt4d_q4)")
     ap.add_argument("--reduce-bf16", action="store_true",
                     help="bf16 cross-shard matmul reductions")
     ap.add_argument(
@@ -287,6 +289,8 @@ def main():
     enc_overrides = {}
     if args.quant_int8:
         enc_overrides["weight_quant"] = "int8"
+    if args.quant_int4:
+        enc_overrides["weight_quant"] = "int4"
     if args.reduce_bf16:
         # NOTE kept out of --production: measured ineffective — GSPMD
         # all-reduces its internal f32 dot accumulator regardless of the

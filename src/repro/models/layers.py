@@ -4,8 +4,6 @@ so the paper's encoding applies uniformly across the zoo (DESIGN.md §4).
 
 from __future__ import annotations
 
-import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,6 @@ encoder stack over the provided frame embeddings.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -15,7 +15,6 @@ is constant per tick).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,6 @@ thereby decoupled from the shape grid.
 
 from __future__ import annotations
 
-from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

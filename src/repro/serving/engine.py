@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -424,7 +424,13 @@ class Engine:
 
     @property
     def stats(self) -> dict:
-        out = {"cache_mode": self.cache_mode, "decode_mode": self.decode_mode}
+        out = {
+            "cache_mode": self.cache_mode,
+            "decode_mode": self.decode_mode,
+            # Serving weight format (drives the decode weight-stream roofline;
+            # see encoding.quant_weight_stream_bytes and docs/PERF.md).
+            "weight_quant": self.enc.weight_quant,
+        }
         if self.cache_mode == "paged":
             out.update(self.alloc.stats)
             out.update(

@@ -8,7 +8,6 @@ reduce-scatters with the next microbatch's compute (latency-hiding scheduler).
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

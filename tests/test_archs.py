@@ -8,7 +8,6 @@ import numpy as np
 import pytest
 
 from repro.configs import registry
-from repro.configs.base import SHAPES
 from repro.core.encoding import Phase
 from repro.core.packed import EncodingConfig
 from repro.models import transformer as T

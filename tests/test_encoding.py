@@ -106,7 +106,8 @@ def test_block_selector_near_optimal_intensity():
     """The paper's tile-size claim, quantified: the VMEM-model selection is
     within 10% of the best feasible arithmetic intensity (benchmarks/
     ablation_tiles.py sweeps the full block space)."""
-    import sys, os
+    import os
+    import sys
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks import ablation_tiles
 

@@ -1,0 +1,159 @@
+"""Dispatch registry (kernels/registry.py): key resolution, tuned-table JSON
+round-trip, unknown-key fallback, and registry-vs-direct-call output parity
+across all quant modes."""
+
+import dataclasses
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import targets as targets_lib
+from repro.core.encoding import Phase
+from repro.kernels import ops, registry
+
+
+@pytest.fixture(autouse=True)
+def _fresh_table_cache():
+    registry.clear_cache()
+    yield
+    registry.clear_cache()
+
+
+def test_m_bucket_boundaries():
+    assert registry.m_bucket(1) == "m1"
+    assert registry.m_bucket(2) == "m8"
+    assert registry.m_bucket(8) == "m8"
+    assert registry.m_bucket(9) == "m64"
+    assert registry.m_bucket(64) == "m64"
+    assert registry.m_bucket(65) == "big"
+
+
+def test_unknown_target_falls_back_to_reference():
+    weird = dataclasses.replace(targets_lib.TPU_V5E, name="weird-accelerator")
+    choice = registry.select(quant="none", phase=Phase.DECODE, m=1, target=weird)
+    assert choice.backend == "reference"
+    assert choice.source == "fallback"
+    assert choice.blocks is None
+
+
+def test_unknown_quant_falls_back_to_reference():
+    choice = registry.select(quant="w2a2", phase=Phase.DECODE, m=1)
+    assert choice.backend == "reference"
+    assert choice.source == "fallback"
+
+
+def test_quant_fallback_is_oracle_backend():
+    """For quantized modes the no-data fallback is the xla oracle path."""
+    weird = dataclasses.replace(targets_lib.TPU_V5E, name="weird-accelerator")
+    for quant in ("w8a8", "w4a8"):
+        choice = registry.select(quant=quant, phase=Phase.DECODE, m=4, target=weird)
+        assert choice.backend == "xla", quant
+
+
+def test_requested_backend_always_wins(tmp_path):
+    """An explicit backend= pins the path even when a tuned entry disagrees."""
+    path = str(tmp_path / "table.json")
+    key = registry.dispatch_key("none", Phase.DECODE, 4, "tpu-v5e")
+    registry.save_table(
+        {"entries": {key: {"backend": "xla", "blocks": [1, 2, 1]}}}, path
+    )
+    choice = registry.select(
+        quant="none", phase=Phase.DECODE, m=4, requested="fused", table_path=path
+    )
+    assert choice.backend == "fused"
+    assert choice.source == "requested"
+    # ...but tuned blocks still flow in when the caller supplied none.
+    assert choice.blocks == (1, 2, 1)
+
+
+def test_tuned_table_json_roundtrip(tmp_path):
+    path = str(tmp_path / "table.json")
+    entries = {
+        registry.dispatch_key("w4a8", Phase.DECODE, 8, "tpu-v5e"): {
+            "backend": "fused", "blocks": [1, 4, 1], "us": 12.5,
+        },
+        registry.dispatch_key("w8a8", Phase.PREFILL, 128, "tpu-v5e"): {
+            "backend": "pallas", "blocks": [2, 2, 2],
+        },
+    }
+    registry.save_table({"entries": entries}, path)
+    registry.clear_cache()
+    loaded = registry.load_table(path)
+    assert loaded["entries"] == json.loads(json.dumps(entries))  # value-identical
+    choice = registry.select(quant="w4a8", phase=Phase.DECODE, m=8, table_path=path)
+    assert choice.backend == "fused"
+    assert choice.blocks == (1, 4, 1)
+    assert choice.source == "tuned"
+
+
+def test_corrupt_table_falls_back_to_policy(tmp_path):
+    path = str(tmp_path / "table.json")
+    with open(path, "w") as f:
+        f.write("{not json")
+    choice = registry.select(quant="none", phase=Phase.DECODE, m=1, table_path=path)
+    assert choice.backend == "fused"  # static default policy, not a crash
+    assert choice.source == "default"
+
+
+def test_checked_in_table_is_loadable_and_typed():
+    """The committed tuned_table.json parses and every entry is well-formed."""
+    table = registry.load_table()
+    assert table["entries"], "checked-in tuned table should not be empty"
+    for key, entry in table["entries"].items():
+        quant, phase, bucket, target = key.split("|")
+        assert quant in registry.QUANTS, key
+        assert bucket in registry.M_BUCKETS, key
+        assert entry["backend"] in registry.BACKENDS_BY_QUANT[quant], key
+        b = entry["blocks"]
+        assert len(b) == 3 and all(isinstance(v, int) and v >= 1 for v in b), key
+
+
+@pytest.mark.parametrize("phase", [Phase.DECODE, Phase.PREFILL])
+def test_registry_vs_direct_call_parity_all_quants(phase):
+    """backend="auto" (registry-resolved) must produce the same output as the
+    direct explicit-backend call it resolves to, for every quant mode."""
+    m = 4 if phase is Phase.DECODE else 40
+    n, k = 384, 256
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(m, k), jnp.float32)
+    w_t = jnp.asarray(rng.randn(n, k), jnp.float32)
+
+    rhs4 = ops.pack_rhs(w_t)
+    rhs4_q, s_w = ops.pack_rhs_q8(w_t)
+    rhs4_p, s_w4 = ops.pack_rhs_q4(w_t)
+
+    cases = {
+        "none": (
+            lambda be: ops.encoded_matmul(
+                x, rhs4, n=n, phase=phase, backend=be,
+                out_dtype=jnp.float32, interpret=True,
+            )
+        ),
+        "w8a8": (
+            lambda be: ops.encoded_matmul_q8(
+                x, rhs4_q, s_w, n=n, phase=phase, backend=be,
+                out_dtype=jnp.float32, interpret=True,
+            )
+        ),
+        "w4a8": (
+            lambda be: ops.encoded_matmul_q4(
+                x, rhs4_p, s_w4, n=n, phase=phase, backend=be,
+                out_dtype=jnp.float32, interpret=True,
+            )
+        ),
+    }
+    for quant, call in cases.items():
+        resolved = registry.select(quant=quant, phase=phase, m=m)
+        auto = call("auto")
+        direct = call(resolved.backend)
+        np.testing.assert_array_equal(
+            np.asarray(auto), np.asarray(direct), err_msg=f"{quant}/{phase}"
+        )
+        # And the resolved path agrees numerically with the oracle backend.
+        oracle = call("xla" if quant != "none" else "reference")
+        np.testing.assert_allclose(
+            np.asarray(auto), np.asarray(oracle), rtol=2e-4, atol=2e-4,
+            err_msg=f"{quant}/{phase} vs oracle",
+        )

@@ -2,9 +2,7 @@
 
 import sys
 
-import jax
 import numpy as np
-import pytest
 
 
 def test_train_driver_end_to_end(monkeypatch, tmp_path):

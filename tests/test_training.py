@@ -4,7 +4,6 @@ equivalence, gradient-compression convergence, optimizer invariants."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import registry
 from repro.core.packed import EncodingConfig
