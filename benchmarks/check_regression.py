@@ -38,6 +38,12 @@ CHECKS = [
     # -- quant ladder: the w4a8 acceptance bar (deterministic traffic model) --
     ("BENCH_decode.json", "quant.w4a8_vs_w8a8_model_tok_s_ratio", "min_abs", 1.5),
     ("BENCH_decode.json", "quant.w4a8_vs_bf16_model_tok_s_ratio", "baseline_frac", 0.99),
+    # -- speculative decode: the PR-4 acceptance bar (measured dispatch
+    #    counts on the repetition-heavy workload; greedy output must stay
+    #    token-identical to plain decode) --
+    ("BENCH_decode.json", "spec.dispatches_per_token", "max_abs", 0.5),
+    ("BENCH_decode.json", "spec.mean_accepted_len", "min_abs", 1.05),
+    ("BENCH_decode.json", "spec.token_identical", "min_abs", 1.0),
     # -- wall clock, wide band (catches artificial slowdowns, not runner skew) --
     ("BENCH_decode.json", "engine.vectorized.tok_s", "baseline_frac", 0.2),
     # -- paged KV cache: deterministic scheduler outcomes (seeded stream) --

@@ -110,7 +110,8 @@ def main():
 # ---- registry autotune (kernel_bench --tune) --------------------------------
 
 # Representative live-row count per M-bucket (registry.m_bucket boundaries).
-_BUCKET_REPS = {"m1": 1, "m8": 8, "m64": 48, "big": 192}
+# "m32" is the spec-decode verify regime: slots x (draft_k + 1) rows.
+_BUCKET_REPS = {"m1": 1, "m8": 8, "m32": 20, "m64": 48, "big": 192}
 
 # Candidate kernel blocks (BM1, BN1, BK1) per phase kind.  Decode candidates
 # sweep the GEMV streaming width BN1; prefill candidates sweep the VMEM-
@@ -159,7 +160,7 @@ def tune(out_path: str | None = None, *, iters: int = 2) -> str:
             cands = (
                 _DECODE_CANDIDATES if phase is Phase.DECODE else _PREFILL_CANDIDATES
             )
-            buckets = ("m1", "m8", "m64") if phase is Phase.DECODE else (
+            buckets = ("m1", "m8", "m32", "m64") if phase is Phase.DECODE else (
                 "m64", "big"
             )
             for bucket in buckets:
@@ -168,7 +169,7 @@ def tune(out_path: str | None = None, *, iters: int = 2) -> str:
                 # Backend comes from the static policy, NOT select(): select
                 # reads the existing tuned table, and copying its backend
                 # would let a stale entry survive every retune.
-                backend = registry_lib.default_backend(quant, phase)
+                backend = registry_lib.default_backend(quant, phase, bucket)
                 best = None
                 for cand in cands:
                     t = run(quant, phase, m, backend, cand)

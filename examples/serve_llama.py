@@ -39,6 +39,18 @@ ap.add_argument("--quant", choices=("none", "w8a8", "w4a8"), default="none",
                      "w4a8 = group int4 (kernels/mmt4d_q4.py)")
 ap.add_argument("--quant-group", type=int, default=16,
                 help="w4a8 K-group size (16 default; 32 = llama.cpp Q4_0)")
+ap.add_argument("--spec-decode", action="store_true",
+                help="speculative decode: prompt-lookup drafts + one batched "
+                     "verify dispatch per step (greedy only; serving/spec.py)")
+ap.add_argument("--draft-k", type=int, default=4,
+                help="max draft tokens proposed per slot per verify step")
+ap.add_argument("--sample", choices=("greedy", "temperature"), default="greedy",
+                help="temperature: per-slot temperature sampling (PRNG "
+                     "threaded per step; disables --spec-decode)")
+ap.add_argument("--temperature", type=float, default=0.8,
+                help="per-request sampling temperature (--sample temperature)")
+ap.add_argument("--eos-id", type=int, default=None,
+                help="stop token: slots finish early when they emit it")
 args = ap.parse_args()
 
 cfg = registry.get_reduced("llama3.2-1b")
@@ -52,6 +64,7 @@ eng = engine_lib.Engine(
     params, cfg, enc, slots=args.slots, max_seq=96,
     cache_mode=args.cache_mode, block_size=args.block_size,
     pool_pages=args.pool_pages,
+    sample=args.sample, spec_decode=args.spec_decode, draft_k=args.draft_k,
 )
 
 rng = np.random.RandomState(0)
@@ -59,9 +72,12 @@ arrival = 0.0
 t0 = time.time()
 for i in range(args.requests):
     plen = rng.randint(4, 20)
+    prompt = rng.randint(1, cfg.vocab_size, plen).astype(np.int32)
+    if args.spec_decode and i % 2 == 0:
+        prompt = np.tile(prompt[:4], 4)  # repetition-heavy cohort: drafts hit
     eng.submit(engine_lib.Request(
-        uid=i, prompt=rng.randint(1, cfg.vocab_size, plen).astype(np.int32),
-        max_new_tokens=args.max_new,
+        uid=i, prompt=prompt, max_new_tokens=args.max_new,
+        eos_id=args.eos_id, temperature=args.temperature,
     ))
 
 steps = 0
@@ -85,6 +101,13 @@ if args.quant != "none":
     print(f"  quant={args.quant} (group={args.quant_group}): "
           f"{wq / p:.3f} bytes/weight streamed per decode token "
           f"({wfp / wq:.2f}x less than bf16 -> projected tok/s uplift)")
+if eng.spec_decode:
+    sp = stats["spec"]
+    print(f"  spec: draft_k={stats['draft_k']} "
+          f"accepted={sp['accepted']}/{sp['proposed']} "
+          f"(rate {sp['acceptance_rate']:.2f}) "
+          f"mean_accepted_len={sp['mean_accepted_len']:.2f} "
+          f"-> ~{sp['mean_accepted_len']:.2f}x fewer decode dispatches/token")
 if stats["cache_mode"] == "paged":
     print(f"  paged: peak_active={stats['peak_active']} "
           f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "

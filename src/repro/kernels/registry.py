@@ -9,8 +9,9 @@ centralizes the decision behind one key:
 
 * quant mode : "none" (bf16/f32), "w8a8" (int8), "w4a8" (group int4)
 * M-bucket   : live-row regime — "m1" (pure GEMV), "m8" (decode slots),
-               "m64" (skinny GEMM), "big" (prefill slab); buckets keep the
-               table finite while still separating the paper's two regimes.
+               "m32" (spec-decode verify: slots x draft window), "m64"
+               (skinny GEMM), "big" (prefill slab); buckets keep the table
+               finite while still separating the paper's two regimes.
 * target     : TargetSpec.name from core/targets.py
 
 Resolution order (select()):
@@ -39,7 +40,7 @@ from repro.core import targets as targets_lib
 Phase = encoding.Phase
 
 QUANTS = ("none", "w8a8", "w4a8")
-M_BUCKETS = ("m1", "m8", "m64", "big")
+M_BUCKETS = ("m1", "m8", "m32", "m64", "big")
 
 # Backends each quant mode understands (ops.py contract).  "auto" is the
 # registry sentinel, resolved here and never passed to a kernel.
@@ -72,6 +73,8 @@ def m_bucket(m: int) -> str:
         return "m1"
     if m <= 8:
         return "m8"
+    if m <= 32:
+        return "m32"
     if m <= 64:
         return "m64"
     return "big"
@@ -81,20 +84,30 @@ def dispatch_key(quant: str, phase: Phase, m: int, target_name: str) -> str:
     return f"{quant}|{phase.value}|{m_bucket(m)}|{target_name}"
 
 
-def default_backend(quant: str, phase: Phase) -> str:
+def default_backend(quant: str, phase: Phase, bucket: str = "") -> str:
     """The static policy — the routing formerly hard-coded across ops.py.
 
-    Decode always takes the fused path (pack/unpack-free, the bandwidth
-    regime's win); prefill takes the fused GEMM slab for unquantized weights
-    and the packed Pallas kernel for quantized ones (their fused slab does
-    not exist — the packed kernel already streams int operands).
+    Decode at GEMV-like row counts ("m1", "m8" — one to a batch of slots)
+    takes the fused path (pack/unpack-free, the bandwidth regime's win).
+    Past that ("m32": the speculative-decode verify window, slots x
+    (draft_k+1) rows; "m64": many-slot decode) the fused GEMV's premise
+    breaks — it keeps the whole (M, K) activation block VMEM-resident per
+    streamed weight tile, a footprint that grows with M — so multi-row
+    decode routes to the packed mmt4d GEMM, the same kernel the prefill
+    slab uses (one verify kernel path, TinyIREE's keep-dispatch-small
+    argument).  The policy is monotonic in M by design; a target where the
+    fused GEMV measures faster at some bucket says so through its tuned
+    entry (tpu-v5e's m64 entries pin "fused"), which outranks this policy.
+    Prefill takes the fused GEMM slab for unquantized weights and the
+    packed Pallas kernel for quantized ones (their fused slab does not
+    exist — the packed kernel already streams int operands).
 
     This is also what `kernel_bench --tune` records as each entry's backend:
     retuning re-measures blocks against the POLICY backend, never copying a
     backend out of the table being regenerated (a stale entry must not
     self-perpetuate across retunes)."""
     if phase is Phase.DECODE:
-        return "fused"
+        return "pallas" if bucket in ("m32", "m64") else "fused"
     return "fused" if quant == "none" else "pallas"
 
 
@@ -198,4 +211,6 @@ def select(
     if entry is not None and entry.get("backend") in valid:
         return KernelChoice(entry["backend"], resolved_blocks, "tuned")
 
-    return KernelChoice(default_backend(quant, phase), resolved_blocks, "default")
+    return KernelChoice(
+        default_backend(quant, phase, m_bucket(m)), resolved_blocks, "default"
+    )

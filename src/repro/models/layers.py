@@ -220,35 +220,53 @@ def attention_decode(
     pos: jnp.ndarray,
     window: int,
 ) -> jnp.ndarray:
-    """Single-token attention against a (ring-buffered) cache.
+    """Decode-phase attention against a (ring-buffered) cache.
 
-    q: (B, 1, H, D); caches: (B, S_c, KV, D); pos: () shared position, or (B,)
-    per-row positions (position-vectorized decode: every batch row attends
-    its own history length; the new token's index — caller has already written
-    slot pos % S_c).
+    q: (B, L, H, D); caches: (B, S_c, KV, D); pos: () shared position, or (B,)
+    per-row positions of the FIRST query token (position-vectorized decode:
+    every batch row attends its own history length; the caller has already
+    written the L new tokens' K/V at slots (pos + j) % S_c).
+
+    L == 1 is the plain one-token decode.  L > 1 is the speculative-decode
+    verify window: query j sits at position pos + j and the `slot <= pos + j`
+    mask makes the window masked-causal — draft token j attends the committed
+    history plus drafts 0..j (their K/V were scattered into the cache by the
+    same dispatch before this read), never drafts j+1..L-1.
     """
-    b, _, h, d = q.shape
+    b, L, h, d = q.shape
     _, s_c, kvh, _ = k_cache.shape
+    # Ring caches hold only the last `window` positions: a draft key at slot
+    # (pos+i) % s_c would alias INSIDE an earlier query's age window, so the
+    # mask below cannot express causality for L > 1 — reject loudly instead
+    # of attending future drafts (spec decode is full-attention only).
+    assert L == 1 or window == 0, (
+        "multi-token decode (spec-decode verify) requires window == 0; "
+        f"got L={L}, window={window}"
+    )
     g = h // kvh
     scale = d**-0.5
-    qg = q.reshape(b, kvh, g, d) * scale
-    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache, preferred_element_type=jnp.float32)
+    qg = q.reshape(b, L, kvh, g, d) * scale
+    s = jnp.einsum(
+        "blkgd,bskd->blkgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
     slot = jnp.arange(s_c)
     pos = jnp.asarray(pos)
-    posb = pos[:, None] if pos.ndim == 1 else pos  # (B, 1) | ()
+    qpos = (pos[:, None] if pos.ndim == 1 else pos) + jnp.arange(L)
+    qpos = jnp.atleast_2d(qpos)  # (B, L) vectorized | (1, L) shared-pos
     if window > 0:
-        # Ring buffer: slots hold positions pos-age; valid while age < window
-        # and the position exists.  age = (pos - slot) mod S_c.
-        age = jnp.mod(posb - slot, s_c)
-        valid = (age < jnp.minimum(posb + 1, window))
+        # Ring buffer: slots hold positions qpos-age; valid while age < window
+        # and the position exists.  age = (qpos - slot) mod S_c.
+        age = jnp.mod(qpos[..., None] - slot, s_c)
+        valid = age < jnp.minimum(qpos[..., None] + 1, window)
     else:
-        valid = slot <= posb
-    # valid: (S_c,) shared-pos, (B, S_c) vectorized.
-    vmask = valid[:, None, None, :] if valid.ndim == 2 else valid[None, None, None]
-    s = jnp.where(vmask, s, -jnp.inf)
+        valid = slot <= qpos[..., None]
+    # valid: (B, L, S_c) vectorized, (1, L, S_c) shared-pos.
+    s = jnp.where(valid[:, :, None, None, :], s, -jnp.inf)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache, preferred_element_type=jnp.float32)
-    return out.reshape(b, 1, h, d).astype(q.dtype)
+    out = jnp.einsum(
+        "blkgs,bskd->blkgd", p, v_cache, preferred_element_type=jnp.float32
+    )
+    return out.reshape(b, L, h, d).astype(q.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +304,11 @@ def attention_apply(
 
     `pos` may be a scalar (all rows share a position — prefill offset or
     uniform decode) or a (B,) vector (position-vectorized decode: each batch
-    row carries its own position; DECODE with S == 1 only).
+    row carries its own position of x[:, 0]; DECODE only).  At DECODE, S > 1
+    is the speculative-decode verify window — row b's S tokens occupy
+    positions pos_b .. pos_b+S-1, all S K/V pairs are written, and attention
+    is masked-causal inside the window; full attention only (window == 0 —
+    attention_decode rejects ring caches for S > 1).
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -319,19 +341,24 @@ def attention_apply(
         and "table" in cache
     ):
         # Paged KV cache: pool (P, bs, KV, D) + per-slot block table (B, NB).
-        # Row b writes its token into page table[b, pos//bs] at offset
-        # pos % bs (the engine guarantees the page exists and is private to
-        # the slot — shared prefix pages are immutable full blocks), then
-        # attends the table-gathered logical view with the SAME per-row `pos`
-        # masking as the dense path.  Idle rows point at the scratch page.
+        # Row b writes token j into page table[b, (pos+j)//bs] at offset
+        # (pos+j) % bs (the engine guarantees every written page exists and is
+        # private to the slot — shared prefix pages are immutable full
+        # blocks), then attends the table-gathered logical view with the SAME
+        # per-row `pos` masking as the dense path.  S > 1 is the speculative-
+        # decode verify window: all S positions scatter before the gather, so
+        # draft keys are visible to later draft queries (masked-causal).
+        # Idle rows point at the scratch page.
         assert window == 0, "paged cache excludes sliding-window configs"
         table = cache["table"]
         bs_page = cache["k"].shape[1]
-        posv = jnp.broadcast_to(jnp.asarray(pos), (b,))
-        pg = table[jnp.arange(b), posv // bs_page]
-        off = posv % bs_page
-        k_pool = cache["k"].at[pg, off].set(k[:, 0])
-        v_pool = cache["v"].at[pg, off].set(v[:, 0])
+        posv = jnp.asarray(pos)
+        posm = (posv[:, None] if posv.ndim == 1 else posv) + jnp.arange(s)
+        posm = jnp.broadcast_to(posm, (b, s))
+        pg = table[jnp.arange(b)[:, None], posm // bs_page]  # (B, S)
+        off = posm % bs_page
+        k_pool = cache["k"].at[pg, off].set(k)
+        v_pool = cache["v"].at[pg, off].set(v)
         out = attention_decode(
             q, paged_gather(k_pool, table), paged_gather(v_pool, table),
             pos=pos, window=0,
@@ -339,13 +366,16 @@ def attention_apply(
         new_cache = {"k": k_pool, "v": v_pool, "table": table}
     elif phase is Phase.DECODE and cache is not None and kv_src is None:
         s_c = cache["k"].shape[1]
-        slot = jnp.mod(jnp.asarray(pos), s_c) if window > 0 else jnp.asarray(pos)
         if pos_vec:
-            # Per-row scatter: row i writes its own cache slot (one token).
-            bidx = jnp.arange(b)
-            k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
-            v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+            # Per-row scatter: row i writes its own S cache slots (one token
+            # per position pos_i + j; S > 1 is the spec-decode verify window,
+            # whose rejected-draft writes stay masked until overwritten).
+            positions = jnp.asarray(pos)[:, None] + jnp.arange(s)  # (B, S)
+            wslot = jnp.mod(positions, s_c) if window > 0 else positions
+            k_cache = cache["k"].at[jnp.arange(b)[:, None], wslot].set(k)
+            v_cache = cache["v"].at[jnp.arange(b)[:, None], wslot].set(v)
         else:
+            slot = jnp.mod(jnp.asarray(pos), s_c) if window > 0 else jnp.asarray(pos)
             k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
             v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
         new_cache = {"k": k_cache, "v": v_cache}

@@ -27,6 +27,17 @@ request requeues and replays) when the pool is exhausted.  cache_mode="dense"
 keeps the PR-1 worst-case (slots, max_seq) reservation as the parity
 baseline; recurrent families (rec/rwkv) and sliding-window configs are
 auto-routed to it.
+
+Speculative decode (spec_decode=True): a model-free prompt-lookup drafter
+(serving/spec.py) proposes up to draft_k tokens per slot per step; ONE
+batched multi-token verify dispatch (make_verify_step — a decode-phase
+forward over (B, L) tokens with per-row position vectors, masked-causal
+inside the draft window, writing L cache positions per row) scores them; the
+engine commits each slot's longest greedy-consistent draft prefix plus the
+model's own next token, and rolls rejected tokens back (dense: masked until
+overwritten; paged: trailing pages freed — audit() stays exact).  Output is
+token-identical to plain greedy decode for any drafter; acceptance only buys
+dispatch amortization (docs/PERF.md §Speculative decode).
 """
 
 from __future__ import annotations
@@ -43,6 +54,7 @@ from repro.core.encoding import Phase
 from repro.core.packed import EncodingConfig
 from repro.models import transformer as T
 from repro.serving import paged as paged_lib
+from repro.serving import spec as spec_lib
 
 
 def make_prefill_step(cfg, enc: EncodingConfig) -> Callable:
@@ -67,6 +79,15 @@ def make_chunked_prefill_step(cfg, enc: EncodingConfig, *, chunk: int = 512) -> 
     Returns prefill_chunked(params, tokens, caches) -> (last_logits, caches).
     Requires full attention or window <= chunk handling via the dense cache
     (positions are absolute)."""
+    if 0 < chunk < cfg.sliding_window:
+        # A window wider than the chunk needs keys from earlier chunks that
+        # the windowed prefill path never concatenates back in — the result
+        # would be silently wrong, not slow.
+        raise ValueError(
+            f"chunked prefill requires sliding_window <= chunk: window "
+            f"{cfg.sliding_window} > chunk {chunk} would silently drop "
+            "cross-chunk attention (grow chunk, or prefill single-shot)"
+        )
 
     def one_chunk(params, tokens, caches, pos):
         logits, caches, _ = T.forward(
@@ -86,10 +107,23 @@ def make_chunked_prefill_step(cfg, enc: EncodingConfig, *, chunk: int = 512) -> 
     return prefill_chunked
 
 
+SAMPLE_MODES = ("greedy", "temperature")
+
+
 def make_decode_step(cfg, enc: EncodingConfig, *, sample: str = "greedy") -> Callable:
-    def decode(params, caches, token, pos):
-        """token: (B, 1) int32; pos: () or (B,) int32 — position of `token`
-        (per-row when vectorized over slot positions)."""
+    """One-token decode step.
+
+    sample="greedy"      -> decode(params, caches, token, pos): argmax.
+    sample="temperature" -> decode(params, caches, token, pos, key, temp):
+        per-row temperature sampling — `temp` is (B,) float32, `key` a PRNG
+        key for THIS step (the engine folds a step counter into its base
+        key).  Rows with temp <= 0 take the argmax (per-slot greedy inside a
+        sampled batch).
+    """
+    if sample not in SAMPLE_MODES:
+        raise ValueError(f"sample must be one of {SAMPLE_MODES}, got {sample!r}")
+
+    def _forward(params, caches, token, pos):
         logits, caches, _ = T.forward(
             params,
             {"tokens": token},
@@ -99,10 +133,57 @@ def make_decode_step(cfg, enc: EncodingConfig, *, sample: str = "greedy") -> Cal
             caches=caches,
             pos=pos,
         )
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return logits, caches
+
+    if sample == "greedy":
+
+        def decode(params, caches, token, pos):
+            """token: (B, 1) int32; pos: () or (B,) int32 — position of
+            `token` (per-row when vectorized over slot positions)."""
+            logits, caches = _forward(params, caches, token, pos)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt[:, None], logits, caches
+
+        return decode
+
+    def decode_sampled(params, caches, token, pos, key, temp):
+        logits, caches = _forward(params, caches, token, pos)
+        last = logits[:, -1, :].astype(jnp.float32)
+        greedy = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        scaled = last / jnp.maximum(temp, 1e-6)[:, None]
+        sampled = jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+        nxt = jnp.where(temp > 0, sampled, greedy)
         return nxt[:, None], logits, caches
 
-    return decode
+    return decode_sampled
+
+
+def make_verify_step(cfg, enc: EncodingConfig) -> Callable:
+    """Batched multi-token verify for speculative decode.
+
+    verify(params, caches, tokens, pos) -> (logits, caches), where tokens is
+    (B, L) int32 — row b's last committed token followed by its L-1 draft
+    tokens — and pos is (B,) int32, the position of tokens[:, 0].  One
+    decode-phase forward scores the whole draft window: the model's cache
+    indexing writes all L positions per row and the decode mask is
+    masked-causal within the window (models/layers.py attention_decode), so
+    logits[:, j] is the next-token distribution given the committed history
+    plus drafts 0..j — exactly what greedy acceptance compares against.
+    """
+
+    def verify(params, caches, tokens, pos):
+        logits, caches, _ = T.forward(
+            params,
+            {"tokens": tokens},
+            cfg=cfg,
+            enc=enc,
+            phase=Phase.DECODE,
+            caches=caches,
+            pos=pos,
+        )
+        return logits, caches
+
+    return verify
 
 
 def _batch_axis(path) -> int:
@@ -163,6 +244,16 @@ class Request:
     max_new_tokens: int
     generated: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # Decode finishes the slot early when this token is emitted (the EOS
+    # itself is kept in `generated`; nothing past it is ever emitted).
+    eos_id: int | None = None
+    # Per-slot sampling temperature (engines built with sample="temperature"
+    # only; <= 0 means greedy for this request inside a sampled batch).
+    temperature: float = 1.0
+    # Speculative-decode accounting (filled by the engine when spec decode
+    # served this request): drafts offered / drafts accepted.
+    draft_proposed: int = 0
+    draft_accepted: int = 0
 
 
 class Engine:
@@ -190,6 +281,29 @@ class Engine:
         attention-only, no sliding window, vectorized decode; anything else
         auto-routes to dense.
       "dense" — the worst-case (slots, max_seq) reservation (parity baseline).
+
+    sample: "greedy" (default) or "temperature" — per-slot temperature
+    sampling (Request.temperature; <= 0 rows stay greedy) with a PRNG key
+    folded per engine step from `seed`.  Note: paged preemption REPLAYS a
+    request from scratch; greedy replay is deterministic, sampled replay
+    draws fresh keys, so sampled engines under pool pressure are not
+    replay-deterministic.
+
+    spec_decode: speculative decode fast path.  Each step, a model-free
+    prompt-lookup drafter (serving/spec.py, or the `drafter` override)
+    proposes up to `draft_k` tokens per slot out of the slot's own token
+    history; ONE batched verify dispatch (make_verify_step — decode-phase
+    forward over the (B, L) draft window with per-row positions) scores
+    them, and the engine commits the longest draft prefix that matches the
+    model's own greedy argmax, plus the model's next token after it (1 to
+    draft_k + 1 tokens per slot per dispatch).  Output is token-identical to
+    plain greedy decode for ANY drafter; only throughput depends on draft
+    quality.  Rejected draft positions need no dense-cache surgery (their
+    K/V stays masked until overwritten) — but paged slots truncate back to
+    the pages their committed length needs, returning draft-only pages to
+    the pool (`audit()` stays exact).  Requires attention-only, no sliding
+    window, vectorized decode, greedy sampling; anything else switches it
+    off.
     """
 
     def __init__(
@@ -205,9 +319,15 @@ class Engine:
         cache_mode: str = "paged",
         block_size: int = 16,
         pool_pages: int | None = None,
+        sample: str = "greedy",
+        seed: int = 0,
+        spec_decode: bool = False,
+        draft_k: int = 4,
+        drafter: Callable | None = None,
     ):
         assert decode_mode in ("vectorized", "grouped"), decode_mode
         assert cache_mode in ("paged", "dense"), cache_mode
+        assert sample in SAMPLE_MODES, sample
         self.params, self.cfg, self.enc = params, cfg, enc
         self.slots = slots
         self.max_seq = max_seq
@@ -227,12 +347,43 @@ class Engine:
         ):
             cache_mode = "dense"
         self.cache_mode = cache_mode
+        self.sample = sample
+        self._base_key = jax.random.PRNGKey(seed)
+        self._step_idx = 0
         self.prefill_fn = jax.jit(make_prefill_step(cfg, enc))
         # Vectorized mode replaces the caches wholesale each step, so the old
         # buffers can be donated (in-place update on device, no copy).  The
         # grouped path re-reads self.caches after the call (merge) — no donate.
         donate = (1,) if decode_mode == "vectorized" else ()
-        self.decode_fn = jax.jit(make_decode_step(cfg, enc), donate_argnums=donate)
+        self.decode_fn = jax.jit(
+            make_decode_step(cfg, enc, sample=sample), donate_argnums=donate
+        )
+        # Speculative decode needs the position-masked attention reads of the
+        # vectorized attn-only path (rejected drafts stay masked garbage) and
+        # greedy-exact acceptance — sampled decode has no greedy target to
+        # match, so sampling switches speculation off.
+        self.draft_k = int(draft_k)
+        self.spec_decode = bool(
+            spec_decode
+            and attn_only
+            and cfg.sliding_window == 0
+            and decode_mode == "vectorized"
+            and sample == "greedy"
+            and self.draft_k > 0
+        )
+        self.drafter = drafter if drafter is not None else spec_lib.propose
+        if self.spec_decode:
+            self.verify_fn = jax.jit(make_verify_step(cfg, enc), donate_argnums=(1,))
+            self.spec_stats = {
+                "steps": 0,          # engine steps served by a verify dispatch
+                "slot_steps": 0,     # per-slot verify participations
+                "proposed": 0,       # draft tokens offered to verify
+                "accepted": 0,       # draft tokens matching the greedy target
+                "committed": 0,      # tokens emitted by spec steps (incl. bonus)
+                "pool_deferred": 0,  # spec steps skipped: draft pages won't fit
+            }
+            self.slot_proposed = np.zeros(slots, np.int64)
+            self.slot_accepted = np.zeros(slots, np.int64)
         if cache_mode == "paged":
             self.block_size = block_size
             self.num_blocks = -(-max_seq // block_size)
@@ -386,6 +537,7 @@ class Engine:
         the same tokens the uninterrupted run would have."""
         req = self.slot_req[s]
         req.generated.clear()
+        req.draft_proposed = req.draft_accepted = 0  # replay re-accounts
         self.alloc.free_pages(self.slot_pages[s])
         self.slot_pages[s] = []
         self.block_table[s, :] = paged_lib.SCRATCH_PAGE
@@ -395,11 +547,13 @@ class Engine:
         self._tables_dirty = True
         self.preemptions += 1
 
-    def _ensure_decode_pages(self) -> None:
+    def _ensure_decode_pages(self, extra: int = 0) -> None:
         """Decode growth: each active slot must own the page its next token
-        writes into.  Allocate at block boundaries; when the pool is dry,
-        preempt the lowest-priority slot (latest admission ticket) until a
-        page frees — possibly the requesting slot itself."""
+        writes into — and, with `extra` > 0 (the speculative-decode verify
+        window), the pages of the `extra` draft positions after it too.
+        Allocate at block boundaries; when the pool is dry, preempt the
+        lowest-priority slot (latest admission ticket) until a page frees —
+        possibly the requesting slot itself."""
         order = sorted(
             (s for s in range(self.slots) if self.slot_req[s] is not None),
             key=lambda s: self.slot_ticket[s],
@@ -407,7 +561,7 @@ class Engine:
         for s in order:
             if self.slot_req[s] is None:
                 continue  # preempted while serving an earlier slot
-            pos = max(int(self.slot_pos[s]) - 1, 0)
+            pos = max(int(self.slot_pos[s]) - 1, 0) + extra
             need = pos // self.block_size + 1
             while self.slot_req[s] is not None and len(self.slot_pages[s]) < need:
                 page = self.alloc.alloc()
@@ -427,10 +581,22 @@ class Engine:
         out = {
             "cache_mode": self.cache_mode,
             "decode_mode": self.decode_mode,
+            "sample": self.sample,
             # Serving weight format (drives the decode weight-stream roofline;
             # see encoding.quant_weight_stream_bytes and docs/PERF.md).
             "weight_quant": self.enc.weight_quant,
         }
+        if self.spec_decode:
+            st = dict(self.spec_stats)
+            # Amortization terms (docs/PERF.md §Speculative decode): a slot's
+            # verify commits mean_accepted_len tokens per dispatch, so decode
+            # dispatches per token is its reciprocal.
+            st["acceptance_rate"] = st["accepted"] / max(st["proposed"], 1)
+            st["mean_accepted_len"] = st["committed"] / max(st["slot_steps"], 1)
+            st["per_slot_proposed"] = self.slot_proposed.tolist()
+            st["per_slot_accepted"] = self.slot_accepted.tolist()
+            out["spec"] = st
+            out["draft_k"] = self.draft_k
         if self.cache_mode == "paged":
             out.update(self.alloc.stats)
             out.update(
@@ -497,59 +663,215 @@ class Engine:
             self.slot_req[s] = r
             self.slot_pos[s] = len(r.prompt)
 
-    def _commit(self, slots_sel: list[int], nxt: np.ndarray) -> int:
+    def _finish_slot(self, s: int) -> None:
+        req = self.slot_req[s]
+        req.done = True
+        self.finished.append(req)
+        self.slot_req[s] = None
+        self.slot_pos[s] = 0  # freed rows decode (discarded) at pos 0
+        if self.cache_mode == "paged":
+            # Freed-on-finish: every page back to the pool (shared pages by
+            # refcount), table row back to scratch.
+            self.alloc.free_pages(self.slot_pages[s])
+            self.slot_pages[s] = []
+            self.block_table[s, :] = paged_lib.SCRATCH_PAGE
+            self._tables_dirty = True
+
+    def _commit_tokens(self, s: int, toks: list[int]) -> int:
+        """Append `toks` to slot s in order, honouring EOS / max_new_tokens /
+        max_seq mid-list (spec decode commits several tokens per dispatch; a
+        finish condition truncates the rest — post-EOS tokens are never
+        emitted).  Returns how many tokens were emitted."""
+        req = self.slot_req[s]
         emitted = 0
-        for s in slots_sel:
-            req = self.slot_req[s]
-            req.generated.append(int(nxt[s, 0]))
+        for t in toks:
+            req.generated.append(t)
             self.slot_pos[s] += 1
             emitted += 1
-            if len(req.generated) >= req.max_new_tokens or self.slot_pos[s] >= self.max_seq:
-                req.done = True
-                self.finished.append(req)
-                self.slot_req[s] = None
-                self.slot_pos[s] = 0  # freed rows decode (discarded) at pos 0
-                if self.cache_mode == "paged":
-                    # Freed-on-finish: every page back to the pool (shared
-                    # pages by refcount), table row back to scratch.
-                    self.alloc.free_pages(self.slot_pages[s])
-                    self.slot_pages[s] = []
-                    self.block_table[s, :] = paged_lib.SCRATCH_PAGE
-                    self._tables_dirty = True
+            if (
+                (req.eos_id is not None and t == req.eos_id)
+                or len(req.generated) >= req.max_new_tokens
+                or self.slot_pos[s] >= self.max_seq
+            ):
+                self._finish_slot(s)
+                break
         return emitted
 
-    def step(self) -> int:
-        """One engine iteration: admit + one decode for every active slot."""
-        self._admit()
-        if self.cache_mode == "paged":
-            self._ensure_decode_pages()
-        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
-        if not active:
-            return 0
-        if self.cache_mode == "paged":
-            self.peak_active = max(self.peak_active, len(active))
+    def _commit(self, slots_sel: list[int], nxt: np.ndarray) -> int:
+        return sum(self._commit_tokens(s, [int(nxt[s, 0])]) for s in slots_sel)
+
+    # ---- speculative decode (prompt-lookup draft + batched verify) ---------
+
+    def _last_tokens(self, active: list[int]) -> np.ndarray:
         last_tokens = np.zeros((self.slots, 1), np.int32)
         for s in active:
             req = self.slot_req[s]
-            last = req.generated[-1] if req.generated else int(req.prompt[-1])
-            last_tokens[s, 0] = last
+            last_tokens[s, 0] = req.generated[-1] if req.generated else int(req.prompt[-1])
+        return last_tokens
+
+    def _sample_args(self, active: list[int]):
+        """(key, temp) extras for sample="temperature" decode dispatches —
+        one fresh key per dispatch, per-slot temperature from the request."""
+        key = jax.random.fold_in(self._base_key, self._step_idx)
+        self._step_idx += 1
+        temp = np.zeros(self.slots, np.float32)
+        for s in active:
+            temp[s] = self.slot_req[s].temperature
+        return key, jnp.asarray(temp)
+
+    def _refresh_tables(self) -> None:
+        if self.cache_mode == "paged" and self._tables_dirty:
+            # Thread the (host-maintained) block tables into the cache
+            # leaves; the decode dispatch gathers K/V pages by table.
+            # Unchanged tables flow through the donated decode call, so
+            # steady-state steps skip the host->device refresh.
+            self.caches = self._with_tables(self.caches)
+            self._tables_dirty = False
+
+    def _plan_drafts(self, active: list[int]):
+        """(L, {slot: draft}) for this step's verify window, or None to take
+        the plain one-token path (no headroom, or nothing to propose)."""
+        # One shared window length L: every row's last verify write lands at
+        # pos-1 + L-1, which must stay inside max_seq even for padded rows
+        # (pads scatter real cache writes), so the most constrained slot caps
+        # the batch.  Compiled verify shapes stay O(draft_k) distinct.
+        head = min(self.max_seq - int(self.slot_pos[s]) + 1 for s in active)
+        L = min(1 + self.draft_k, head)
+        if L <= 1:
+            return None
+        drafts: dict[int, np.ndarray] = {}
+        any_draft = False
+        for s in active:
+            req = self.slot_req[s]
+            # A commit is at most (accepted drafts + 1 bonus) tokens — never
+            # draft past the request's remaining budget.
+            room = req.max_new_tokens - len(req.generated) - 1
+            kk = min(L - 1, max(room, 0))
+            d = spec_lib._EMPTY
+            if kk > 0:
+                ctx = np.concatenate([
+                    np.asarray(req.prompt, np.int32),
+                    np.asarray(req.generated, np.int32),
+                ])
+                d = np.asarray(self.drafter(ctx, kk), np.int32).ravel()[:kk]
+            drafts[s] = d
+            any_draft = any_draft or d.size > 0
+        return (L, drafts) if any_draft else None
+
+    def _draft_pages_fit(self, active: list[int], L: int) -> bool:
+        """True when every active slot's draft window (positions through
+        pos-1 + L-1) fits the free pool as-is.  Speculation is an
+        optimization: it must NEVER preempt a live request to fund pages
+        that only unverified drafts need — when the window doesn't fit, the
+        step falls back to plain one-token decode (which allocates at most
+        the baseline growth page and may legitimately preempt for that)."""
+        need = 0
+        for s in active:
+            pos = max(int(self.slot_pos[s]) - 1, 0) + L - 1
+            need += max(0, pos // self.block_size + 1 - len(self.slot_pages[s]))
+        return need <= self.alloc.available()
+
+    def _truncate_slot_pages(self, s: int) -> None:
+        """Spec-decode rollback: return the pages only rejected drafts
+        touched.  The committed history plus the next write position
+        (slot_pos - 1) define what the slot still needs; trailing pages go
+        back to the pool and their table entries back to scratch.  The stale
+        draft K/V inside KEPT pages needs no scrubbing — the decode mask
+        (slot <= pos) hides it until a later write replaces it."""
+        need = (int(self.slot_pos[s]) - 1) // self.block_size + 1
+        extra = self.slot_pages[s][need:]
+        if not extra:
+            return
+        self.slot_pages[s] = self.slot_pages[s][:need]
+        self.alloc.free_pages(extra)
+        self.block_table[s, need:] = paged_lib.SCRATCH_PAGE
+        self._tables_dirty = True
+
+    def _spec_step(self, active: list[int], L: int, drafts: dict) -> int:
+        """ONE batched verify dispatch scores every slot's draft window;
+        commit each slot's longest greedy-consistent prefix + bonus token."""
+        mat = np.zeros((self.slots, L), np.int32)
+        mat[:, :1] = self._last_tokens(active)
+        for s in active:
+            mat[s, 1 : 1 + drafts[s].size] = drafts[s]
+        pos_vec = np.maximum(self.slot_pos.astype(np.int32) - 1, 0)
+        logits, self.caches = self.verify_fn(
+            self.params, self.caches, jnp.asarray(mat), jnp.asarray(pos_vec)
+        )
+        # tgt[s, j]: the model's greedy token AFTER consuming mat[s, :j+1] —
+        # the acceptance target for draft j and the bonus token at the cut.
+        tgt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        st = self.spec_stats
+        st["steps"] += 1
+        emitted = 0
+        for s in active:
+            d = drafts[s]
+            a = 0
+            while a < d.size and int(d[a]) == int(tgt[s, a]):
+                a += 1
+            commit = [int(t) for t in d[:a]] + [int(tgt[s, a])]
+            req = self.slot_req[s]
+            req.draft_proposed += int(d.size)
+            req.draft_accepted += a
+            self.slot_proposed[s] += int(d.size)
+            self.slot_accepted[s] += a
+            st["slot_steps"] += 1
+            st["proposed"] += int(d.size)
+            st["accepted"] += a
+            got = self._commit_tokens(s, commit)
+            st["committed"] += got
+            emitted += got
+            if self.cache_mode == "paged" and self.slot_req[s] is not None:
+                self._truncate_slot_pages(s)
+        return emitted
+
+    # ---- the engine loop ---------------------------------------------------
+
+    def step(self) -> int:
+        """One engine iteration: admit + ONE decode (or ONE speculative
+        verify) dispatch for every active slot."""
+        self._admit()
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        spec_plan = self._plan_drafts(active) if self.spec_decode else None
+        if self.cache_mode == "paged":
+            if spec_plan is not None and not self._draft_pages_fit(active, spec_plan[0]):
+                self.spec_stats["pool_deferred"] += 1
+                spec_plan = None
+            self._ensure_decode_pages(extra=(spec_plan[0] - 1) if spec_plan else 0)
+            # Decode growth may have preempted slots (requests requeued).
+            active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+            if not active:
+                return 0
+            self.peak_active = max(self.peak_active, len(active))
+            if spec_plan is not None:
+                L, drafts = spec_plan
+                live = set(active)
+                drafts = {s: d for s, d in drafts.items() if s in live}
+                spec_plan = (
+                    (L, drafts) if any(d.size for d in drafts.values()) else None
+                )
+        if spec_plan is not None:
+            self._refresh_tables()
+            return self._spec_step(active, *spec_plan)
+        last_tokens = self._last_tokens(active)
         if self.decode_mode == "vectorized":
-            if self.cache_mode == "paged" and self._tables_dirty:
-                # Thread the (host-maintained) block tables into the cache
-                # leaves; the decode dispatch gathers K/V pages by table.
-                # Unchanged tables flow through the donated decode call, so
-                # steady-state steps skip the host->device refresh.
-                self.caches = self._with_tables(self.caches)
-                self._tables_dirty = False
+            self._refresh_tables()
             # One dispatch serves all active slots regardless of position skew:
             # each row decodes at its own pos.  Inactive rows decode (and write
             # their cache row at pos 0) with token 0; that write is harmless
             # because every cache position is written before it is attended —
             # the next admission's prefill rewrites the row from position 0 up.
             pos_vec = np.maximum(self.slot_pos.astype(np.int32) - 1, 0)
-            nxt, _, self.caches = self.decode_fn(
-                self.params, self.caches, jnp.asarray(last_tokens), jnp.asarray(pos_vec)
+            args = (
+                self.params, self.caches,
+                jnp.asarray(last_tokens), jnp.asarray(pos_vec),
             )
+            if self.sample == "temperature":
+                nxt, _, self.caches = self.decode_fn(*args, *self._sample_args(active))
+            else:
+                nxt, _, self.caches = self.decode_fn(*args)
             return self._commit(active, np.asarray(nxt))
         # Grouped baseline: slots admitted with different prompt lengths decode
         # on their own pos via per-pos grouping; each group's cache rows merge
@@ -559,9 +881,14 @@ class Engine:
             groups.setdefault(int(self.slot_pos[s]), []).append(s)
         emitted = 0
         for p, slots in groups.items():
-            nxt, _, new_caches = self.decode_fn(
-                self.params, self.caches, jnp.asarray(last_tokens), jnp.asarray(p - 1, jnp.int32)
+            args = (
+                self.params, self.caches,
+                jnp.asarray(last_tokens), jnp.asarray(p - 1, jnp.int32),
             )
+            if self.sample == "temperature":
+                nxt, _, new_caches = self.decode_fn(*args, *self._sample_args(slots))
+            else:
+                nxt, _, new_caches = self.decode_fn(*args)
             self.caches = slot_merge(self.caches, new_caches, slots)
             emitted += self._commit(slots, np.asarray(nxt))
         return emitted

@@ -1,0 +1,62 @@
+"""Model-free prompt-lookup drafting for speculative decode (serving/engine.py).
+
+V-Seek-style speculation without a separate draft model: the draft for a
+slot's next `k` tokens is read out of the request's OWN token history
+(prompt + generated so far).  If the trailing n-gram (the last `ngram`
+tokens, falling back to shorter suffixes down to `min_ngram`) occurred
+earlier in the history, the tokens that followed its most recent earlier
+occurrence are proposed verbatim.
+
+On repetition-heavy workloads (code completion, extraction, templated chat,
+greedy loops) acceptance is high; on incompressible text the drafter simply
+proposes nothing and the engine falls back to plain one-token decode — a
+proposal costs no model dispatch either way (pure host-side numpy, never
+traced).  Correctness never depends on draft quality: the verify step commits
+a draft token only when it equals the model's own greedy choice, so engine
+output is token-identical to plain greedy decode for ANY drafter (the
+token-identity harness in tests/test_spec_decode.py pins this with both this
+drafter and an adversarial one).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_EMPTY = np.zeros((0,), np.int32)
+
+
+def propose(
+    context: np.ndarray,
+    k: int,
+    *,
+    ngram: int = 3,
+    min_ngram: int = 1,
+) -> np.ndarray:
+    """Up to `k` draft tokens continuing `context` by prompt lookup.
+
+    Matches the longest trailing n-gram (length `ngram` down to `min_ngram`)
+    against every earlier position of `context`; on a hit, returns the tokens
+    that followed the most recent earlier occurrence that still has a full
+    k-token continuation (recency wins — the local pattern beats a stale one
+    — but a match flush against the end of the context has nothing left to
+    propose, so matches too close to the end defer to the longest available
+    continuation: on a periodic tail this is what keeps drafts k tokens
+    long).  Returns an empty array when no suffix recurs or there is nothing
+    usable to propose.
+    """
+    ctx = np.asarray(context, np.int32).ravel()
+    n_ctx = int(ctx.shape[0])
+    if k <= 0 or n_ctx < min_ngram + 1:
+        return _EMPTY
+    for n in range(min(ngram, n_ctx - 1), min_ngram - 1, -1):
+        suffix = ctx[n_ctx - n:]
+        windows = np.lib.stride_tricks.sliding_window_view(ctx, n)
+        hits = np.flatnonzero((windows == suffix).all(axis=1))
+        # Earlier occurrences only, with at least one token following them.
+        hits = hits[hits + n < n_ctx]
+        if hits.size:
+            room = n_ctx - (hits + n)  # continuation tokens after each match
+            full = hits[room >= k]
+            start = int(full[-1] if full.size else hits[np.argmax(room)]) + n
+            return np.ascontiguousarray(ctx[start : start + k], dtype=np.int32)
+    return _EMPTY

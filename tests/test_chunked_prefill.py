@@ -45,6 +45,18 @@ def test_chunked_prefill_matches_single_shot(arch):
     np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=2e-4, atol=2e-4)
 
 
+def test_chunked_prefill_rejects_window_wider_than_chunk():
+    """window > chunk would silently drop cross-chunk attention (the
+    windowed prefill path never concatenates earlier chunks back in) — the
+    constructor must refuse instead of producing wrong logits."""
+    cfg = registry.get_reduced("qwen2-1.5b", sliding_window=16)
+    with pytest.raises(ValueError, match="sliding_window <= chunk"):
+        engine_lib.make_chunked_prefill_step(cfg, ENC, chunk=8)
+    # window <= chunk keeps building (the documented supported regime).
+    engine_lib.make_chunked_prefill_step(cfg, ENC, chunk=16)
+    engine_lib.make_chunked_prefill_step(cfg, ENC, chunk=32)
+
+
 @pytest.mark.parametrize("shape", [(2, 2, 3, 16, 8, 8), (3, 4, 2, 8, 32, 16)])
 def test_batch_mmt4d_kernel(shape):
     bsz, m1, k1, m0, n0 = shape[0], shape[1], shape[2], shape[3], shape[4]

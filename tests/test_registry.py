@@ -25,9 +25,39 @@ def test_m_bucket_boundaries():
     assert registry.m_bucket(1) == "m1"
     assert registry.m_bucket(2) == "m8"
     assert registry.m_bucket(8) == "m8"
-    assert registry.m_bucket(9) == "m64"
+    assert registry.m_bucket(9) == "m32"
+    assert registry.m_bucket(32) == "m32"
+    assert registry.m_bucket(33) == "m64"
     assert registry.m_bucket(64) == "m64"
     assert registry.m_bucket(65) == "big"
+
+
+def test_verify_bucket_routes_to_mmt4d_not_gemv(tmp_path):
+    """The spec-decode verify regime (m32: slots x draft window) must route
+    to the packed mmt4d GEMM, not the VMEM-row-resident fused GEMV — both by
+    static policy and in the checked-in tuned table."""
+    for quant in registry.QUANTS:
+        # Monotonic in M: GEMV-like row counts keep the fused GEMV, all
+        # multi-row decode (verify window and beyond) routes mmt4d.
+        assert registry.default_backend(quant, Phase.DECODE, "m1") == "fused"
+        assert registry.default_backend(quant, Phase.DECODE, "m8") == "fused"
+        assert registry.default_backend(quant, Phase.DECODE, "m32") == "pallas"
+        assert registry.default_backend(quant, Phase.DECODE, "m64") == "pallas"
+    # A target that measured the fused GEMV faster at a multi-row bucket
+    # overrides the policy through its tuned entry (tpu-v5e m64).
+    m64 = registry.select(quant="none", phase=Phase.DECODE, m=48)
+    assert m64.backend == "fused" and m64.source == "tuned"
+    # Policy applies when no tuned entry exists (empty table)...
+    empty = str(tmp_path / "empty.json")
+    registry.save_table({"entries": {}}, empty)
+    choice = registry.select(
+        quant="none", phase=Phase.DECODE, m=20, table_path=empty
+    )
+    assert choice.backend == "pallas" and choice.source == "default"
+    # ...and the committed tuned table agrees for every quant mode.
+    for quant in registry.QUANTS:
+        tuned = registry.select(quant=quant, phase=Phase.DECODE, m=20)
+        assert tuned.backend == "pallas", quant
 
 
 def test_unknown_target_falls_back_to_reference():
