@@ -38,6 +38,15 @@ CHECKS = [
     # -- quant ladder: the w4a8 acceptance bar (deterministic traffic model) --
     ("BENCH_decode.json", "quant.w4a8_vs_w8a8_model_tok_s_ratio", "min_abs", 1.5),
     ("BENCH_decode.json", "quant.w4a8_vs_bf16_model_tok_s_ratio", "baseline_frac", 0.99),
+    # -- attention op class: the PR-5 acceptance bar.  The paged-decode
+    #    kernel must keep streaming only live pages (fused <= 0.5x the
+    #    gather-materialization baseline at 4k context — deterministic
+    #    traffic model), with kernel parity (dense/paged vs jnp references
+    #    + paged-vs-dense bit-consistency) holding exactly --
+    ("BENCH_decode.json", "attn.paged_bytes_ratio_4k", "max_abs", 0.5),
+    ("BENCH_decode.json", "attn.kernel_parity", "min_abs", 1.0),
+    ("BENCH_decode.json", "attn.paged_vs_dense_bit_consistent", "min_abs", 1.0),
+    ("BENCH_decode.json", "attn.attn_weight_crossover_tokens", "baseline_frac", 0.99),
     # -- speculative decode: the PR-4 acceptance bar (measured dispatch
     #    counts on the repetition-heavy workload; greedy output must stay
     #    token-identical to plain decode) --

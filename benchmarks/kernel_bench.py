@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core import encoding, targets
 from repro.core.encoding import Phase
+from repro.kernels import attn as attn_lib
 from repro.kernels import ops, ref
 from repro.kernels import registry as registry_lib
 
@@ -120,9 +121,82 @@ _DECODE_CANDIDATES = [(1, 1, 1), (1, 2, 1), (1, 4, 1), (1, 8, 1)]
 _PREFILL_CANDIDATES = [(1, 2, 1), (2, 2, 2), (1, 4, 2), (2, 8, 2)]
 
 
-def tune(out_path: str | None = None, *, iters: int = 2) -> str:
+# Attention op-class candidates: (q_chunk, kv_chunk) streaming granularity
+# (decode kernels use kv_chunk only; the stored blocks keep the 2-tuple).
+# S reps land one representative context length inside each tuned bucket
+# ("sbig" stays policy-routed — an 8k+ interpret sweep buys no information
+# the s4k point does not already carry).
+_ATTN_S_REPS = {"s256": 256, "s1k": 768, "s4k": 2048}
+_ATTN_DECODE_CANDIDATES = [(1, 32), (1, 64), (1, 128)]
+_ATTN_PREFILL_CANDIDATES = [(64, 64), (64, 128), (128, 128)]
+
+
+def _tune_attn(entries: dict, *, iters: int) -> None:
+    """Measure attention-kernel chunk candidates per (phase, S-bucket) key
+    and add them to `entries` (kernels/attn.py dense decode + flash
+    prefill; the paged kernel streams at page granularity and shares the
+    decode entries' backend).
+
+    Like the matmul tuner, the recorded backend is the STATIC POLICY, never
+    a cross-backend measurement: on this interpret-mode CPU container the
+    jnp reference beats interpreted Pallas at every shape, so measuring
+    backends here would permanently route serving off the kernels.  A
+    target where the reference genuinely wins a bucket gets its entry
+    pinned by a real-hardware measurement (the same convention as the
+    hand-pinned tpu-v5e m64 "fused" matmul entries)."""
+    target = targets.TPU_V5E
+    rng = np.random.RandomState(0)
+    b, kvh, g, d = 1, 2, 4, 32
+    for phase in (Phase.DECODE, Phase.PREFILL):
+        cands = (
+            _ATTN_DECODE_CANDIDATES if phase is Phase.DECODE
+            else _ATTN_PREFILL_CANDIDATES
+        )
+        for bucket, s_rep in _ATTN_S_REPS.items():
+            key = registry_lib.attn_dispatch_key(phase, s_rep, target.name)
+            backend = registry_lib.default_attn_backend(phase, bucket)
+            k = jnp.asarray(rng.randn(b, s_rep, kvh, d), jnp.float32)
+            v = jnp.asarray(rng.randn(b, s_rep, kvh, d), jnp.float32)
+            best = None
+            for qc, kc in cands:
+                if phase is Phase.DECODE:
+                    q = jnp.asarray(rng.randn(b, 1, kvh * g, d), jnp.float32)
+                    pos = jnp.asarray([s_rep - 1], jnp.int32)
+                    fn = lambda: attn_lib.dense_decode_attention(
+                        q, k, v, pos, kv_chunk=kc, interpret=True
+                    )
+                else:
+                    sq = min(s_rep, 256)  # prefill band; KV length carries S
+                    q = jnp.asarray(rng.randn(b, sq, kvh * g, d), jnp.float32)
+                    off = s_rep - sq
+                    fn = lambda: attn_lib.flash_prefill_attention(
+                        q, k, v, causal=True, q_offset=off,
+                        q_chunk=qc, kv_chunk=kc, interpret=True,
+                    )
+                t = _time(fn, iters=iters, warmup=1)
+                print(f"tune/{key}/blocks={qc}x{kc},{t * 1e6:.1f},us")
+                if best is None or t < best[0]:
+                    best = (t, (qc, kc))
+            entries[key] = {
+                "backend": backend,
+                "blocks": list(best[1]),
+                "us": round(best[0] * 1e6, 1),
+                "shape_bsd": [b, s_rep, kvh * g * d],
+            }
+
+
+def tune(
+    out_path: str | None = None,
+    *,
+    iters: int = 2,
+    op_classes: tuple[str, ...] = ("matmul", "attn"),
+) -> str:
     """Measure candidate tile/block shapes per dispatch key and persist the
-    winning table.  Returns the path written."""
+    winning table.  Returns the path written.
+
+    `op_classes` picks which classes to re-measure; keys of classes NOT
+    re-measured this run are carried over from the existing table unchanged
+    (a partial retune must not drop the other class's entries)."""
     target = targets.TPU_V5E
     n, k = 1024, 256  # N1=8, K1=2: every candidate divides the tile counts
     rng = np.random.RandomState(0)
@@ -154,7 +228,19 @@ def tune(out_path: str | None = None, *, iters: int = 2) -> str:
             )
         return _time(fn, iters=iters, warmup=1)
 
-    entries = {}
+    # Carry over entries of classes not re-measured this run (attn keys are
+    # "attn|..."; everything else is the matmul class).
+    entries = {
+        k: dict(v)
+        for k, v in registry_lib.load_table(out_path)["entries"].items()
+        if ("attn" if k.startswith("attn|") else "matmul") not in op_classes
+    }
+    if "attn" in op_classes:
+        _tune_attn(entries, iters=iters)
+    if "matmul" not in op_classes:
+        path = registry_lib.save_table({"entries": entries}, out_path)
+        print(f"tune/table_written,{len(entries)},{path}")
+        return path
     for quant in registry_lib.QUANTS:
         for phase in (Phase.DECODE, Phase.PREFILL):
             cands = (
@@ -191,10 +277,11 @@ def tune(out_path: str | None = None, *, iters: int = 2) -> str:
 
 
 if __name__ == "__main__":
-    if "--tune" in sys.argv[1:]:
+    if "--tune" in sys.argv[1:] or "--tune-attn" in sys.argv[1:]:
         out = None
         if "--out" in sys.argv[1:]:
             out = sys.argv[sys.argv.index("--out") + 1]
-        tune(out)
+        classes = ("attn",) if "--tune-attn" in sys.argv[1:] else ("matmul", "attn")
+        tune(out, op_classes=classes)
     else:
         main()

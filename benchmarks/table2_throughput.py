@@ -302,6 +302,133 @@ def decode_fastpath_bench(
     return rows
 
 
+# ---- attention op class: fused paged decode vs gather fallback -------------
+
+
+def attention_bench(
+    *,
+    quick: bool = False,
+    out_json: str = "BENCH_decode.json",
+):
+    """The attention-kernel headline (kernels/attn.py): decode-attention HBM
+    bytes per token, fused paged kernel vs the `paged_gather` fallback.
+
+      bytes model : deterministic TPU traffic (encoding.decode_attn_hbm_bytes)
+                    at 4k context on llama3.2-1b-class KV geometry — the
+                    CI-gated ratio (fused <= 0.5x gather) plus the short-
+                    context rows showing the bounded-fallback win.
+      parity      : paged kernel vs the jnp reference path on a randomized
+                    GQA/ragged-position case, dense kernel vs reference, and
+                    paged-vs-dense bit-consistency at matched granularity —
+                    parity == 1.0 is CI-gated.
+      crossover   : context length where fused attention traffic overtakes
+                    the w4a8 weight stream (the "attention is the next
+                    roofline" number, docs/PERF.md).
+
+    Merges an "attn" section into BENCH_decode.json and returns CSV rows."""
+    from repro.kernels import attn as attn_lib
+    from repro.kernels import registry as registry_lib
+    from repro.models import layers as L
+
+    # llama3.2-1b-class KV geometry (full-size, for the traffic model).
+    kvh, hd, layers, itemsize = 8, 64, 16, 2
+    ctx, max_seq, bs = 4096, 4096, 16
+    model_4k = encoding.decode_attn_hbm_bytes(
+        ctx, max_seq=max_seq, block_size=bs, num_kv_heads=kvh, head_dim=hd,
+        num_layers=layers, itemsize=itemsize,
+    )
+    model_short = encoding.decode_attn_hbm_bytes(
+        256, max_seq=max_seq, block_size=bs, num_kv_heads=kvh, head_dim=hd,
+        num_layers=layers, itemsize=itemsize,
+    )
+    # w4a8 weight stream of the same model class: every projection byte per
+    # token (param_count ~ 1.1e9 at full size; use the projection total).
+    w4a8_bytes = encoding.quant_weight_stream_bytes(1, 1_100_000_000, quant="w4a8")
+    crossover = encoding.attn_weight_crossover_tokens(
+        w4a8_bytes, num_kv_heads=kvh, head_dim=hd, num_layers=layers,
+        itemsize=itemsize,
+    )
+
+    # Kernel parity on a randomized reduced case (interpret-mode Pallas).
+    rng = np.random.RandomState(0)
+    b, L_q, h, kv, d, pbs, nb = 3, 2, 8, 2, 16, 8, 4
+    pool_shape = (1 + b * nb, pbs, kv, d)
+    k_pool = jnp.asarray(rng.randn(*pool_shape), jnp.float32)
+    v_pool = jnp.asarray(rng.randn(*pool_shape), jnp.float32)
+    table = jnp.asarray(1 + rng.permutation(b * nb).reshape(b, nb), jnp.int32)
+    q = jnp.asarray(rng.randn(b, L_q, h, d), jnp.float32)
+    pos = jnp.asarray(rng.randint(0, nb * pbs - L_q + 1, b), jnp.int32)
+
+    t_paged = _time(
+        lambda: attn_lib.paged_decode_attention(
+            q, k_pool, v_pool, table, pos, interpret=True
+        ),
+        iters=1 if quick else 3, warmup=1,
+    )
+    got = attn_lib.paged_decode_attention(
+        q, k_pool, v_pool, table, pos, interpret=True
+    )
+    gathered_k = L.paged_gather(k_pool, table)
+    gathered_v = L.paged_gather(v_pool, table)
+    t_gather = _time(
+        lambda: L.attention_decode(
+            q, L.paged_gather(k_pool, table), L.paged_gather(v_pool, table),
+            pos=pos, window=0,
+        ),
+        iters=1 if quick else 3, warmup=1,
+    )
+    want = L.attention_decode(q, gathered_k, gathered_v, pos=pos, window=0)
+    err_paged = float(jnp.max(jnp.abs(got - want)))
+    dense_kernel = attn_lib.dense_decode_attention(
+        q, gathered_k, gathered_v, pos, kv_chunk=pbs, interpret=True
+    )
+    err_dense = float(jnp.max(jnp.abs(dense_kernel - want)))
+    bit_consistent = bool(jnp.all(got == dense_kernel))
+    parity = 1.0 if (err_paged < 1e-4 and err_dense < 1e-4 and bit_consistent) else 0.0
+
+    choice = registry_lib.select_attn(
+        phase=encoding.Phase.DECODE, s=max_seq, requested="auto"
+    )
+    attn_stats = {
+        "kv_geometry": {
+            "num_kv_heads": kvh, "head_dim": hd, "num_layers": layers,
+            "itemsize": itemsize, "block_size": bs, "max_seq": max_seq,
+        },
+        "hbm_bytes_per_token_4k": model_4k,
+        "hbm_bytes_per_token_256": model_short,
+        "paged_bytes_ratio_4k": model_4k["ratio"],
+        "bounded_fallback_ratio_256": (
+            model_short["bounded_gather"] / model_short["gather"]
+        ),
+        "w4a8_weight_stream_bytes": w4a8_bytes,
+        "attn_weight_crossover_tokens": crossover,
+        "kernel_parity": parity,
+        "paged_vs_dense_bit_consistent": 1.0 if bit_consistent else 0.0,
+        "max_abs_err_paged": err_paged,
+        "max_abs_err_dense": err_dense,
+        "paged_kernel_us": t_paged * 1e6,
+        "gather_reference_us": t_gather * 1e6,
+        "registry_backend_4k": choice.backend,
+        "registry_source_4k": choice.source,
+    }
+    try:
+        with open(out_json) as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {}
+    result["attn"] = attn_stats
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    return [
+        ("attn/paged_bytes_ratio_4k", attn_stats["paged_bytes_ratio_4k"]),
+        ("attn/fused_mb_per_token_4k", model_4k["fused"] / 1e6),
+        ("attn/gather_mb_per_token_4k", model_4k["gather"] / 1e6),
+        ("attn/crossover_tokens_vs_w4a8", crossover),
+        ("attn/kernel_parity", parity),
+        ("attn/paged_kernel_us", attn_stats["paged_kernel_us"]),
+    ]
+
+
 # ---- speculative decode: prompt-lookup draft + batched verify --------------
 
 
@@ -538,6 +665,8 @@ def main(*, quick: bool = False):
         for name, val in op_level_throughput():
             print(f"{name},{val:.4f},cpu-wall-clock")
     for name, val in decode_fastpath_bench(quick=quick):
+        print(f"{name},{val:.4f},see-BENCH_decode.json")
+    for name, val in attention_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in spec_decode_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")

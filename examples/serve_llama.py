@@ -34,6 +34,12 @@ ap.add_argument("--cache-mode", choices=("paged", "dense"), default="paged")
 ap.add_argument("--block-size", type=int, default=16)
 ap.add_argument("--pool-pages", type=int, default=None,
                 help="paged pool size; small values force preemption")
+ap.add_argument("--attn-backend", choices=("auto", "pallas", "xla"),
+                default="auto",
+                help="attention op-class backend (kernels/registry.py "
+                     "select_attn): pallas = fused paged-decode / flash "
+                     "prefill microkernels (kernels/attn.py), xla = the jnp "
+                     "references, auto = tuned table -> static policy")
 ap.add_argument("--quant", choices=("none", "w8a8", "w4a8"), default="none",
                 help="serving weight format: w8a8 = int8 per-channel, "
                      "w4a8 = group int4 (kernels/mmt4d_q4.py)")
@@ -56,8 +62,8 @@ args = ap.parse_args()
 cfg = registry.get_reduced("llama3.2-1b")
 WEIGHT_QUANT = {"none": "none", "w8a8": "int8", "w4a8": "int4"}[args.quant]
 enc = EncodingConfig(
-    enabled=True, backend="xla", weight_quant=WEIGHT_QUANT,
-    quant_group=args.quant_group,
+    enabled=True, backend="xla", attn_backend=args.attn_backend,
+    weight_quant=WEIGHT_QUANT, quant_group=args.quant_group,
 )
 params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
 eng = engine_lib.Engine(
@@ -89,6 +95,13 @@ total = sum(len(r.generated) for r in eng.finished)
 print(f"served {len(eng.finished)} requests / {total} tokens "
       f"in {dt:.2f}s over {steps} engine steps ({total/dt:.2f} tok/s)")
 stats = eng.stats
+ATTN_NOTE = {
+    "pallas": "decode streamed only each slot's live KV pages — no "
+              "paged_gather materialization (kernels/attn.py)",
+    "xla": "decode ran the jnp reference path (gather-materializing fallback)",
+}
+print(f"  attn_backend={stats['attn_backend']} (requested "
+      f"{args.attn_backend}): {ATTN_NOTE[stats['attn_backend']]}")
 if args.quant != "none":
     # Decode weight-stream roofline: aggregate projection bytes per token at
     # this quant mode vs bf16 (encoding.quant_weight_stream_bytes; the scale

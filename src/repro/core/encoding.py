@@ -218,6 +218,71 @@ def kv_bytes_per_token(
     return 2 * num_layers * num_kv_heads * head_dim * itemsize
 
 
+def decode_attn_hbm_bytes(
+    context: int,
+    *,
+    max_seq: int | None = None,
+    block_size: int = 16,
+    num_kv_heads: int,
+    head_dim: int,
+    num_layers: int = 1,
+    itemsize: int = 2,
+) -> dict[str, float]:
+    """Decode-attention HBM traffic model for ONE generated token of ONE
+    sequence at `context` cached tokens (all layers, K and V).
+
+    gather (the pre-kernel fallback): `paged_gather` materializes the full
+    logical view over the table width (ceil(max_seq / block) blocks) — the
+    pool pages are READ, the dense view is WRITTEN, and the attention
+    softmax READS it back: 3 passes over the table-width KV footprint,
+    independent of how much of it is live.
+
+    bounded_gather: the same fallback after the table is narrowed to the
+    slot's allocated page count (engine._with_tables / paged_gather
+    nb_blocks) — still 3 passes, but only over live blocks.
+
+    fused: the paged-decode kernel (kernels/attn.py) streams each live page
+    HBM->VMEM exactly once and materializes nothing: 1 pass over live
+    blocks.  This is the O(pool) -> O(live) conversion the attention op
+    class buys; `ratio` = fused / gather is the CI-gated headline
+    (<= 0.5 at 4k context — benchmarks/check_regression.py).
+    """
+    max_seq = max_seq or context
+    per_tok = kv_bytes_per_token(
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+    )
+    view = -(-max_seq // block_size) * block_size
+    live = max(1, -(-context // block_size)) * block_size
+    gather = 3 * view * per_tok
+    fused = live * per_tok
+    return {
+        "gather": float(gather),
+        "bounded_gather": float(3 * live * per_tok),
+        "fused": float(fused),
+        "ratio": fused / gather,
+        "bytes_per_cached_token": float(per_tok),
+    }
+
+
+def attn_weight_crossover_tokens(
+    weight_stream_bytes: int,
+    *,
+    num_kv_heads: int,
+    head_dim: int,
+    num_layers: int,
+    itemsize: int = 2,
+) -> float:
+    """Context length where fused decode-attention traffic equals the
+    per-token weight stream: past this many cached tokens, KV traffic — not
+    the weight stream — is the decode roofline, which is why attention was
+    the mandatory next microkernel after the w4a8 weight path (docs/PERF.md
+    §Decode-attention traffic)."""
+    per_tok = kv_bytes_per_token(
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+    )
+    return weight_stream_bytes / max(1, per_tok)
+
+
 def dense_kv_hbm_bytes(
     slots: int, max_seq: int, num_layers: int, num_kv_heads: int, head_dim: int,
     *, itemsize: int = 2,

@@ -29,6 +29,12 @@ from repro.kernels import ops
 class EncodingConfig:
     enabled: bool = True
     backend: str = "xla"        # xla | pallas | fused | reference
+    # Attention op-class backend (kernels/registry.py select_attn): "xla"
+    # (the jnp references), "pallas" (kernels/attn.py microkernels), or
+    # "auto" (tuned table -> static policy -> xla fallback).  Mirrors
+    # `backend`'s contract for the matmul class; serving (serve_llama
+    # --attn-backend) defaults to "auto".
+    attn_backend: str = "xla"
     # Pallas interpret mode: None = auto (interpret only when no TPU backend
     # is present — see targets.resolve_interpret); True/False force it.
     interpret: bool | None = None

@@ -1,0 +1,442 @@
+"""Pallas TPU attention microkernels — the attention op class.
+
+PRs 1-4 microkernel-ized every matmul in the serving path, but attention
+stayed plain XLA: `attention_decode` softmaxes over the full cache and the
+paged path materializes the whole logical KV view (`paged_gather`, a fresh
+(B, NB*bs, KV, D) dense copy) on EVERY decode dispatch — at long contexts
+that gather traffic dominates the weight stream the matmul kernels shrank
+(V-Seek's point: optimized-GEMV decode is attention/KV-bound).  This module
+gives all three attention phases a hand-tiled kernel:
+
+  paged_decode_attention  decode against the page pool DIRECTLY: the block
+                          table rides as a scalar-prefetch operand and the
+                          kernel's BlockSpec index_map gathers K/V pages
+                          tile-by-tile inside the dispatch — no materialized
+                          logical view, and only the slot's LIVE pages are
+                          streamed (beyond-live grid steps clamp their index
+                          map to the last live page, so the pipelined copy is
+                          elided, and their compute is `pl.when`-skipped).
+  dense_decode_attention  the dense-cache analogue: K/V chunks streamed with
+                          the same online softmax, ring-window mask included.
+  flash_prefill_attention tiled causal GQA flash attention (the Pallas
+                          analogue of layers.attention_chunked), q-offset
+                          aware so chunked prefill rides the same kernel.
+
+All three share one online-softmax accumulator (`_online_update`), keep the
+running (m, l, acc) state in VMEM scratch across the innermost grid
+dimension, and support per-row position vectors and the L > 1 masked-causal
+spec-decode verify window.  A fully-masked chunk is an EXACT no-op of the
+accumulator (m unchanged -> corr == 1.0, p == 0), which makes skip-by-mask
+bitwise identical to skip-by-guard — the paged and dense kernels produce
+bit-identical outputs whenever their streaming granularity matches
+(dense kv_chunk == page block size; tests/test_attn_kernels.py pins this).
+
+Dispatch routing lives in kernels/registry.py (`select_attn`, the second op
+class: attn|phase|S-bucket|target); models/layers.py consults it per call.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import pl_compat
+
+
+def _online_update(s, valid, v, m_ref, l_ref, acc_ref):
+    """One online-softmax step over a scored chunk.
+
+    s: (L, KV, G, C) f32 scores; valid: bool broadcastable to s;
+    v: (C, KV, D) values; scratch m/l: (L, KV, G), acc: (L, KV, G, D).
+    Fully-masked chunks leave (m, l, acc) bitwise unchanged (corr == 1).
+    """
+    s = jnp.where(valid, s, -jnp.inf)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # Guard rows with no valid key yet: keep the exponent argument finite.
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(valid, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "lkgc,ckd->lkgd", p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+
+def _init_state(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _finalize(out_ref, l_ref, acc_ref, shape, dtype):
+    out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+    out_ref[...] = out.reshape(shape).astype(dtype)
+
+
+def _norm_pos(pos, b) -> jnp.ndarray:
+    """Scalar or (B,) position of q[:, 0] -> (B,) int32."""
+    p = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(jnp.atleast_1d(p), (b,))
+
+
+# ---------------------------------------------------------------------------
+# Fused paged-decode attention (in-kernel block-table gather)
+
+
+def _paged_decode_kernel(
+    table_ref, pos_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+    *, bs: int, L: int, kvh: int, g: int, scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nb = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _():
+        _init_state(m_ref, l_ref, acc_ref)
+
+    pos_b = pos_ref[b]
+    last = pos_b + L - 1  # last written position of this row's verify window
+
+    # Beyond-live pages are never attended (their index map already clamps
+    # to the last live page, so no fresh bytes moved either).
+    @pl.when(j * bs <= last)
+    def _():
+        d = q_ref.shape[-1]
+        qg = q_ref[0].reshape(L, kvh, g, d) * scale
+        k = k_ref[0]  # (bs, KV, D) — ONE pool page, gathered via index map
+        s = jnp.einsum(
+            "lkgd,ckd->lkgc", qg, k, preferred_element_type=jnp.float32
+        )
+        slot = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, bs), 3)
+        qpos = pos_b + jax.lax.broadcasted_iota(jnp.int32, (L, 1, 1, 1), 0)
+        valid = slot <= qpos  # masked-causal inside the verify window
+        _online_update(s, valid, v_ref[0], m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nb - 1)
+    def _():
+        _finalize(out_ref, l_ref, acc_ref, (1, L, kvh * g, q_ref.shape[-1]),
+                  out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q: jnp.ndarray,       # (B, L, H, D)
+    k_pool: jnp.ndarray,  # (P, bs, KV, D) physical pages
+    v_pool: jnp.ndarray,  # (P, bs, KV, D)
+    table: jnp.ndarray,   # (B, NB) int32 page ids (logical block -> page)
+    pos: jnp.ndarray,     # () or (B,) int32 position of q[:, 0]
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode attention straight off the page pool: gathers each row's live
+    K/V pages inside the kernel (scalar-prefetched block table drives the
+    BlockSpec index map), online softmax over the page stream, per-row
+    positions, full attention only (the paged cache excludes ring windows).
+    L > 1 is the spec-decode verify window (masked-causal; the caller has
+    already scattered all L K/V pairs into the pool).
+
+    Streams ceil((pos+L)/bs) pages per row instead of materializing the
+    (B, NB*bs, KV, D) `paged_gather` view — the O(pool) -> O(live) win.
+    """
+    b, L, h, d = q.shape
+    _, bs, kvh, _ = k_pool.shape
+    nb = table.shape[1]
+    g = h // kvh
+    scale = d**-0.5
+    posv = _norm_pos(pos, b)
+
+    def live_block(bi, j, tbl, pv):
+        # Clamp beyond-live steps to the last live page: the block index is
+        # then unchanged from the previous step and the copy is elided.
+        return tbl[bi, jnp.minimum(j, (pv[bi] + L - 1) // bs)]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, nb),
+        in_specs=[
+            pl.BlockSpec((1, L, h, d), lambda bi, j, tbl, pv: (bi, 0, 0, 0)),
+            pl.BlockSpec(
+                (1, bs, kvh, d),
+                lambda bi, j, tbl, pv: (live_block(bi, j, tbl, pv), 0, 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, bs, kvh, d),
+                lambda bi, j, tbl, pv: (live_block(bi, j, tbl, pv), 0, 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, L, h, d), lambda bi, j, tbl, pv: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((L, kvh, g), jnp.float32),
+            pltpu.VMEM((L, kvh, g), jnp.float32),
+            pltpu.VMEM((L, kvh, g, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_decode_kernel, bs=bs, L=L, kvh=kvh, g=g, scale=scale
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, L, h, d), q.dtype),
+        compiler_params=pl_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="paged_decode_attention",
+    )(table.astype(jnp.int32), posv, q, k_pool, v_pool)
+
+
+# ---------------------------------------------------------------------------
+# Dense-cache decode attention (ring-window aware)
+
+
+def _dense_decode_kernel(
+    pos_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+    *, kc: int, s_c: int, window: int, L: int, kvh: int, g: int, scale: float,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _():
+        _init_state(m_ref, l_ref, acc_ref)
+
+    pos_b = pos_ref[b]
+    last = pos_b + L - 1
+    # Full attention skips chunks past the newest written slot; a ring cache
+    # may hold valid (wrapped) positions in every chunk, so it visits all.
+    run = (j * kc <= last) if window == 0 else (j >= 0)
+
+    @pl.when(run)
+    def _():
+        d = q_ref.shape[-1]
+        qg = q_ref[0].reshape(L, kvh, g, d) * scale
+        s = jnp.einsum(
+            "lkgd,ckd->lkgc", qg, k_ref[0], preferred_element_type=jnp.float32
+        )
+        slot = j * kc + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, kc), 3)
+        qpos = pos_b + jax.lax.broadcasted_iota(jnp.int32, (L, 1, 1, 1), 0)
+        # Tail guard: when kc does not divide S_c the last block reads past
+        # the cache (Pallas pads the edge block; content is undefined) —
+        # mask those columns out of the scores AND zero their V rows so no
+        # garbage bit pattern (even a NaN encoding) can reach the
+        # accumulator through 0 * v.
+        in_range = slot < s_c
+        v = jnp.where(
+            (j * kc + jax.lax.broadcasted_iota(jnp.int32, (kc, 1, 1), 0)) < s_c,
+            v_ref[0], 0.0,
+        )
+        if window > 0:
+            # Same mask as layers.attention_decode: rows still inside the
+            # window take the cheap prefix mask (nothing wrapped or aged
+            # out yet); only wrapped rows pay the ring-age mod.
+            age = jnp.mod(qpos - slot, s_c)
+            ring = age < jnp.minimum(qpos + 1, window)
+            valid = jnp.where(qpos < window, slot <= qpos, ring) & in_range
+        else:
+            valid = (slot <= qpos) & in_range
+        _online_update(s, valid, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nk - 1)
+    def _():
+        _finalize(out_ref, l_ref, acc_ref, (1, L, kvh * g, q_ref.shape[-1]),
+                  out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "kv_chunk", "interpret")
+)
+def dense_decode_attention(
+    q: jnp.ndarray,        # (B, L, H, D)
+    k_cache: jnp.ndarray,  # (B, S_c, KV, D)
+    v_cache: jnp.ndarray,  # (B, S_c, KV, D)
+    pos: jnp.ndarray,      # () or (B,) int32 position of q[:, 0]
+    *,
+    window: int = 0,
+    kv_chunk: int | None = None,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Dense-cache decode attention: K/V streamed in kv_chunk slabs with the
+    same online softmax as the paged kernel (kv_chunk == page block size
+    gives bit-identical outputs), ring-window mask for sliding-window caches,
+    per-row positions, L > 1 masked-causal verify window (window == 0 only —
+    the same contract layers.attention_decode enforces)."""
+    b, L, h, d = q.shape
+    _, s_c, kvh, _ = k_cache.shape
+    assert L == 1 or window == 0, (L, window)
+    g = h // kvh
+    scale = d**-0.5
+    posv = _norm_pos(pos, b)
+    kc = min(s_c, kv_chunk or 128)
+    # No host-side padding: a ragged tail would force a full HBM copy of
+    # both caches per dispatch; the kernel masks the edge block instead.
+    nk = pl.cdiv(s_c, kc)
+
+    def live_chunk(bi, j, pv):
+        if window > 0:
+            return j  # ring chunks are all potentially live
+        return jnp.minimum(j, (pv[bi] + L - 1) // kc)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, nk),
+        in_specs=[
+            pl.BlockSpec((1, L, h, d), lambda bi, j, pv: (bi, 0, 0, 0)),
+            pl.BlockSpec(
+                (1, kc, kvh, d), lambda bi, j, pv: (bi, live_chunk(bi, j, pv), 0, 0)
+            ),
+            pl.BlockSpec(
+                (1, kc, kvh, d), lambda bi, j, pv: (bi, live_chunk(bi, j, pv), 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, L, h, d), lambda bi, j, pv: (bi, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((L, kvh, g), jnp.float32),
+            pltpu.VMEM((L, kvh, g), jnp.float32),
+            pltpu.VMEM((L, kvh, g, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _dense_decode_kernel,
+        kc=kc, s_c=s_c, window=window, L=L, kvh=kvh, g=g, scale=scale,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, L, h, d), q.dtype),
+        compiler_params=pl_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="dense_decode_attention",
+    )(posv, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# Flash prefill (tiled causal GQA)
+
+
+def _flash_prefill_kernel(
+    q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
+    *, qc: int, kc: int, sk: int, q_offset: int, causal: bool, window: int,
+    kvh: int, g: int, scale: float,
+):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _():
+        _init_state(m_ref, l_ref, acc_ref)
+
+    q_end = q_offset + (i + 1) * qc - 1  # last query position of this band
+    run = (j * kc <= q_end) if (causal and window == 0) else (j >= 0)
+
+    @pl.when(run)
+    def _():
+        d = q_ref.shape[-1]
+        qg = q_ref[0].reshape(qc, kvh, g, d) * scale
+        s = jnp.einsum(
+            "qkgd,ckd->qkgc", qg, k_ref[0], preferred_element_type=jnp.float32
+        )  # (qc, KV, G, kc) — query-chunk axis plays the L role below
+        qpos = (
+            q_offset + i * qc
+            + jax.lax.broadcasted_iota(jnp.int32, (qc, 1, 1, 1), 0)
+        )
+        kpos = j * kc + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, kc), 3)
+        # Edge-block guard (kc may not divide Sk): mask the scores and zero
+        # the V tail so undefined padded reads can never reach the
+        # accumulator (see the dense kernel note).
+        valid = kpos < sk
+        v = jnp.where(
+            (j * kc + jax.lax.broadcasted_iota(jnp.int32, (kc, 1, 1), 0)) < sk,
+            v_ref[0], 0.0,
+        )
+        if causal:
+            valid = valid & (kpos <= qpos)
+        if window > 0:
+            valid = valid & (kpos > qpos - window)
+        valid = jnp.broadcast_to(valid, (qc, 1, 1, kc))
+        _online_update(s, valid, v, m_ref, l_ref, acc_ref)
+
+    @pl.when(j == nk - 1)
+    def _():
+        _finalize(out_ref, l_ref, acc_ref, (1, qc, kvh * g, q_ref.shape[-1]),
+                  out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "q_offset", "q_chunk", "kv_chunk", "interpret"
+    ),
+)
+def flash_prefill_attention(
+    q: jnp.ndarray,  # (B, Sq, H, D)
+    k: jnp.ndarray,  # (B, Sk, KV, D)
+    v: jnp.ndarray,  # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    q_chunk: int = 128,
+    kv_chunk: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Tiled flash prefill: the Pallas analogue of layers.attention_chunked.
+    Causal GQA with sliding-window and q-offset support (chunked prefill
+    passes the absolute offset of q[:, 0]); upper-triangle KV chunks are
+    skipped (index map clamps, compute is pl.when-guarded)."""
+    b, sq, h, d = q.shape
+    _, sk, kvh, _ = k.shape
+    g = h // kvh
+    scale = d**-0.5
+    qc = min(q_chunk, sq)
+    kc = min(kv_chunk, sk)
+    # No host-side padding (full Q/K/V HBM copies); edge blocks are masked
+    # in-kernel, and out-of-range output rows are masked writes.
+    nq = pl.cdiv(sq, qc)
+    nk = pl.cdiv(sk, kc)
+
+    def k_block(bi, i, j):
+        if causal and window == 0:
+            # Clamp beyond-diagonal chunks to the band's last needed chunk.
+            return jnp.minimum(j, (q_offset + (i + 1) * qc - 1) // kc)
+        return j
+
+    kernel = functools.partial(
+        _flash_prefill_kernel,
+        qc=qc, kc=kc, sk=sk, q_offset=q_offset, causal=causal, window=window,
+        kvh=kvh, g=g, scale=scale,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, qc, h, d), lambda bi, i, j: (bi, i, 0, 0)),
+            pl.BlockSpec((1, kc, kvh, d), lambda bi, i, j: (bi, k_block(bi, i, j), 0, 0)),
+            pl.BlockSpec((1, kc, kvh, d), lambda bi, i, j: (bi, k_block(bi, i, j), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, qc, h, d), lambda bi, i, j: (bi, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, sq, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((qc, kvh, g), jnp.float32),
+            pltpu.VMEM((qc, kvh, g), jnp.float32),
+            pltpu.VMEM((qc, kvh, g, d), jnp.float32),
+        ],
+        compiler_params=pl_compat.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="flash_prefill_attention",
+    )(q, k, v)
+    return out

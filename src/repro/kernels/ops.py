@@ -525,7 +525,9 @@ def encoded_matmul_q4(
     return out2d[:m, :n].astype(out_dtype).reshape(*lead, n)
 
 
-# Re-exports for benchmarks/tests.
+# Re-exports for benchmarks/tests.  (The attention op class lives in
+# kernels/attn.py and is routed by registry.select_attn from
+# models/layers.attention_apply — its callers import that module directly.)
 pack_pallas = pack_lib.pack_pallas
 unpack_pallas = pack_lib.unpack_pallas
 mmt4d_pallas = mmt4d_lib.mmt4d_pallas

@@ -3,7 +3,9 @@ selection boundary (TinyIREE's "clean selection/deployment seam").
 
 Every encoded matmul used to pick its implementation through scattered
 `backend="fused"/"pallas"/"q8"` branching in ops.py call sites.  This module
-centralizes the decision behind one key:
+centralizes the decision behind one key.  Two op classes share the table:
+
+matmul (select()):
 
     (quant mode, phase, M-bucket, target name)  ->  KernelChoice(backend, blocks)
 
@@ -14,7 +16,23 @@ centralizes the decision behind one key:
                finite while still separating the paper's two regimes.
 * target     : TargetSpec.name from core/targets.py
 
-Resolution order (select()):
+attention (select_attn()):
+
+    ("attn", phase, S-bucket, target name)  ->  KernelChoice(backend, blocks)
+
+* S-bucket   : context-length regime — "s256"/"s1k"/"s4k"/"sbig" over the
+               logical KV length the dispatch attends (cache width at
+               decode, key length at prefill).  Attention cost scales with
+               S the way matmul cost scales with M, so S plays the bucket
+               role here.
+* backend    : "xla" (the jnp references layers.attention_decode /
+               attention_chunked) or "pallas" (kernels/attn.py — paged or
+               dense decode kernel, flash prefill).
+* blocks     : (q_chunk, kv_chunk) streaming granularity for the Pallas
+               kernels (decode uses kv_chunk only; the paged kernel streams
+               at page granularity and ignores blocks).
+
+Resolution order (both classes):
   1. an explicit `requested` backend always wins (tests/benches pin paths);
   2. a tuned-table entry for the key (blocks measured by
      `benchmarks/kernel_bench.py --tune`, persisted to the checked-in
@@ -64,7 +82,9 @@ class KernelChoice:
     """One resolved dispatch decision."""
 
     backend: str
-    blocks: tuple[int, int, int] | None = None  # (BM1, BN1, BK1); GEMV uses BN1
+    # matmul: (BM1, BN1, BK1) kernel blocks (GEMV uses BN1).
+    # attn  : (q_chunk, kv_chunk) streaming granularity.
+    blocks: tuple[int, ...] | None = None
     source: str = "default"  # "requested" | "tuned" | "default" | "fallback"
 
 
@@ -213,4 +233,91 @@ def select(
 
     return KernelChoice(
         default_backend(quant, phase, m_bucket(m)), resolved_blocks, "default"
+    )
+
+
+# ---- the attention op class -------------------------------------------------
+
+ATTN_OP = "attn"
+
+# "xla" is the jnp reference pair (layers.attention_decode /
+# attention_chunked) — also the no-data fallback; "pallas" is kernels/attn.py.
+ATTN_BACKENDS = ("xla", "pallas")
+ATTN_FALLBACK_BACKEND = "xla"
+
+S_BUCKETS = ("s256", "s1k", "s4k", "sbig")
+
+
+def s_bucket(s: int) -> str:
+    """Context-length bucket: the logical KV length the dispatch attends."""
+    if s <= 256:
+        return "s256"
+    if s <= 1024:
+        return "s1k"
+    if s <= 4096:
+        return "s4k"
+    return "sbig"
+
+
+def attn_dispatch_key(phase: Phase, s: int, target_name: str) -> str:
+    return f"{ATTN_OP}|{phase.value}|{s_bucket(s)}|{target_name}"
+
+
+def default_attn_backend(phase: Phase, bucket: str = "") -> str:
+    """Static attention policy: every phase of a known target takes the
+    Pallas kernel — decode because the paged kernel streams only the slot's
+    live pages (no materialized `paged_gather` view) and the dense kernel
+    bounds its chunk scan at the newest written slot; prefill because the
+    flash kernel skips upper-triangle KV chunks the reference visits-and-
+    masks.  There is no S-bucket below which the reference wins on traffic
+    (the gather view costs O(pool) at every context length), so the policy
+    is constant; a target where the reference measures faster at some bucket
+    says so through its tuned entry, which outranks this."""
+    return "pallas"
+
+
+def _attn_tuned_blocks(entry: dict | None) -> tuple[int, ...] | None:
+    if entry is None or not isinstance(entry.get("blocks"), (list, tuple)):
+        return None
+    b = entry["blocks"]
+    if len(b) in (2, 3) and all(isinstance(v, int) and v >= 1 for v in b):
+        return tuple(b[:2])  # (q_chunk, kv_chunk)
+    return None
+
+
+def select_attn(
+    *,
+    phase: Phase,
+    s: int,
+    target: targets_lib.TargetSpec = targets_lib.TPU_V5E,
+    requested: str | None = None,
+    blocks: tuple[int, ...] | None = None,
+    table_path: str | None = None,
+) -> KernelChoice:
+    """Resolve one attention dispatch — the second op class, mirroring
+    select(): `requested` is the caller's attn_backend (EncodingConfig /
+    serve_llama --attn-backend); "auto"/None defer to tuned table -> static
+    policy -> "xla" fallback on unknown targets."""
+    target_name = getattr(target, "name", str(target))
+    key = attn_dispatch_key(phase, s, target_name)
+    entry = _tuned_entry(key, table_path)
+    resolved_blocks = blocks if blocks is not None else _attn_tuned_blocks(entry)
+
+    if requested not in (None, "auto"):
+        if requested not in ATTN_BACKENDS:
+            raise ValueError(
+                f"attention backend {requested!r} is not valid "
+                f"(valid: {ATTN_BACKENDS}); use 'auto' for registry routing"
+            )
+        return KernelChoice(requested, resolved_blocks, "requested")
+
+    known_targets = {targets_lib.TPU_V5E.name, targets_lib.RISCV_VLEN256.name}
+    if not isinstance(phase, Phase) or target_name not in known_targets:
+        return KernelChoice(ATTN_FALLBACK_BACKEND, None, "fallback")
+
+    if entry is not None and entry.get("backend") in ATTN_BACKENDS:
+        return KernelChoice(entry["backend"], resolved_blocks, "tuned")
+
+    return KernelChoice(
+        default_attn_backend(phase, s_bucket(s)), resolved_blocks, "default"
     )

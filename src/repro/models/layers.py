@@ -10,7 +10,10 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import packed
+from repro.core import targets as targets_lib
 from repro.core.encoding import Phase
+from repro.kernels import attn as attn_kernels
+from repro.kernels import registry as registry_lib
 from repro.parallel import constraints
 
 # ---------------------------------------------------------------------------
@@ -199,17 +202,41 @@ def attention_chunked(
     return out[:, :sq, :h_true].astype(q.dtype)
 
 
-def paged_gather(pool: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+def paged_gather(
+    pool: jnp.ndarray, table: jnp.ndarray, *, nb_blocks: int | None = None
+) -> jnp.ndarray:
     """Gather a slot-logical dense cache view from a paged pool.
 
     pool: (P, bs, KV, D) physical pages; table: (B, NB) int32 page ids.
     Returns (B, NB*bs, KV, D) — row b's logical positions in order, exactly
     the dense cache slice the slot would hold (positions past the slot's
     allocated blocks read whatever page the table points at — the decode
-    mask `slot <= pos` never attends them)."""
+    mask `slot <= pos` never attends them).
+
+    `nb_blocks` bounds the gather to the first nb_blocks logical blocks
+    (static): short sequences should not pay for empty trailing table
+    entries even on this reference/fallback path.  The serving engine
+    narrows the table leaf itself to the live page count
+    (engine._with_tables), so its fallback gathers are bounded for free;
+    the kernel path (kernels/attn.py paged_decode_attention) never
+    materializes this view at all."""
+    if nb_blocks is not None and nb_blocks < table.shape[1]:
+        table = table[:, :nb_blocks]
     b, nb = table.shape
     g = pool[table]  # (B, NB, bs, KV, D)
     return g.reshape(b, nb * pool.shape[1], *pool.shape[2:])
+
+
+def _masked_softmax(s: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Softmax over the last axis with `valid` masking, safe for rows with
+    NO valid entry (all -inf): those rows come back all-zero instead of NaN
+    — a padded admission slot must never poison the batch."""
+    s = jnp.where(valid, s, -jnp.inf)
+    m = s.max(axis=-1, keepdims=True)
+    m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+    p = jnp.exp(s - m_safe)
+    p = jnp.where(valid, p, 0.0)
+    return p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
 
 
 def attention_decode(
@@ -255,14 +282,20 @@ def attention_decode(
     qpos = jnp.atleast_2d(qpos)  # (B, L) vectorized | (1, L) shared-pos
     if window > 0:
         # Ring buffer: slots hold positions qpos-age; valid while age < window
-        # and the position exists.  age = (qpos - slot) mod S_c.
+        # and the position exists.  age = (qpos - slot) mod S_c.  Rows still
+        # inside their first window (qpos < window — nothing has wrapped or
+        # aged out) reduce exactly to the cheap prefix mask: slot s holds
+        # position s, age = qpos - s >= 0 and < window iff s <= qpos.  Only
+        # wrapped rows pay the mod.
         age = jnp.mod(qpos[..., None] - slot, s_c)
-        valid = age < jnp.minimum(qpos[..., None] + 1, window)
+        ring = age < jnp.minimum(qpos[..., None] + 1, window)
+        valid = jnp.where(qpos[..., None] < window, slot <= qpos[..., None], ring)
     else:
         valid = slot <= qpos[..., None]
-    # valid: (B, L, S_c) vectorized, (1, L, S_c) shared-pos.
-    s = jnp.where(valid[:, :, None, None, :], s, -jnp.inf)
-    p = jax.nn.softmax(s, axis=-1)
+    # valid: (B, L, S_c) vectorized, (1, L, S_c) shared-pos.  The guarded
+    # softmax keeps fully-masked rows (padded admission slots) at zero
+    # instead of NaN.
+    p = _masked_softmax(s, valid[:, :, None, None, :])
     out = jnp.einsum(
         "blkgs,bskd->blkgd", p, v_cache, preferred_element_type=jnp.float32
     )
@@ -359,10 +392,24 @@ def attention_apply(
         off = posm % bs_page
         k_pool = cache["k"].at[pg, off].set(k)
         v_pool = cache["v"].at[pg, off].set(v)
-        out = attention_decode(
-            q, paged_gather(k_pool, table), paged_gather(v_pool, table),
-            pos=pos, window=0,
+        choice = registry_lib.select_attn(
+            phase=Phase.DECODE, s=table.shape[1] * bs_page, target=enc.target,
+            requested=enc.attn_backend,
         )
+        if choice.backend == "pallas":
+            # Fused paged-decode kernel: K/V pages gathered tile-by-tile
+            # INSIDE the dispatch (scalar-prefetched block table), only the
+            # slot's live pages streamed — the (B, NB*bs, KV, D) logical
+            # view is never materialized.
+            out = attn_kernels.paged_decode_attention(
+                q, k_pool, v_pool, table, posm[:, 0],
+                interpret=targets_lib.resolve_interpret(enc.interpret),
+            )
+        else:
+            out = attention_decode(
+                q, paged_gather(k_pool, table), paged_gather(v_pool, table),
+                pos=pos, window=0,
+            )
         new_cache = {"k": k_pool, "v": v_pool, "table": table}
     elif phase is Phase.DECODE and cache is not None and kv_src is None:
         s_c = cache["k"].shape[1]
@@ -379,7 +426,19 @@ def attention_apply(
             k_cache = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
             v_cache = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
         new_cache = {"k": k_cache, "v": v_cache}
-        out = attention_decode(q, k_cache, v_cache, pos=pos, window=window)
+        choice = registry_lib.select_attn(
+            phase=Phase.DECODE, s=s_c, target=enc.target,
+            requested=enc.attn_backend,
+        )
+        if choice.backend == "pallas" and (s == 1 or window == 0):
+            out = attn_kernels.dense_decode_attention(
+                q, k_cache, v_cache, jnp.asarray(pos, jnp.int32),
+                window=window,
+                kv_chunk=choice.blocks[1] if choice.blocks else None,
+                interpret=targets_lib.resolve_interpret(enc.interpret),
+            )
+        else:
+            out = attention_decode(q, k_cache, v_cache, pos=pos, window=window)
     else:
         # When W_o's packed K-padding already covers the padded head count,
         # the padded heads flow straight into the (zero) padding rows of W_o —
@@ -399,18 +458,44 @@ def attention_apply(
             k_att = jnp.concatenate([cache["k"][:, :pos], k], axis=1)
             v_att = jnp.concatenate([cache["v"][:, :pos], v], axis=1)
             q_off = pos
-        out = attention_chunked(
-            q, k_att, v_att,
-            causal=causal and kv_src is None,
-            window=window,
-            q_chunk=cfg.q_chunk,
-            kv_chunk=cfg.kv_chunk,
-            q_offset=q_off,
-            expand_kv=cfg.tp_attn_expand_kv,
-            causal_bands=cfg.causal_bands,
-            pad_heads_to=cfg.pad_attn_heads_to,
-            keep_padded_heads=keep_pad,
+        # Flash prefill eligibility: inference-side plain self-attention
+        # only — the TP expand_kv reshard and cross attention keep the
+        # chunked reference (the kernel has no sharding constraints inside
+        # it), and TRAIN needs autodiff through the attention, which the
+        # forward-only Pallas kernel does not provide.
+        choice = registry_lib.select_attn(
+            phase=Phase.PREFILL, s=k_att.shape[1], target=enc.target,
+            requested=enc.attn_backend,
         )
+        if (
+            choice.backend == "pallas"
+            and phase is not Phase.TRAIN
+            and kv_src is None
+            and not cfg.tp_attn_expand_kv
+        ):
+            qc, kc = (choice.blocks or (cfg.q_chunk, cfg.kv_chunk))[:2]
+            out = attn_kernels.flash_prefill_attention(
+                q, k_att, v_att,
+                causal=causal,
+                window=window,
+                q_offset=q_off,
+                q_chunk=qc,
+                kv_chunk=kc,
+                interpret=targets_lib.resolve_interpret(enc.interpret),
+            )
+        else:
+            out = attention_chunked(
+                q, k_att, v_att,
+                causal=causal and kv_src is None,
+                window=window,
+                q_chunk=cfg.q_chunk,
+                kv_chunk=cfg.kv_chunk,
+                q_offset=q_off,
+                expand_kv=cfg.tp_attn_expand_kv,
+                causal_bands=cfg.causal_bands,
+                pad_heads_to=cfg.pad_attn_heads_to,
+                keep_padded_heads=keep_pad,
+            )
         if cache is not None and kv_src is None:
             assert "table" not in cache, (
                 "paged caches are decode-only; the engine prefills into a "

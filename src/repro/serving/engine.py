@@ -52,6 +52,7 @@ import numpy as np
 
 from repro.core.encoding import Phase
 from repro.core.packed import EncodingConfig
+from repro.kernels import registry as registry_lib
 from repro.models import transformer as T
 from repro.serving import paged as paged_lib
 from repro.serving import spec as spec_lib
@@ -520,13 +521,33 @@ class Engine:
 
         self.caches = jax.tree_util.tree_map_with_path(one, self.caches)
 
+    def _live_table_width(self) -> int:
+        """Logical block-table width the NEXT decode dispatch needs: the max
+        allocated page count over active slots, bucketed to a power of two
+        (compiled decode shapes stay O(log num_blocks)).  Short sequences
+        then stop paying for empty trailing table entries — the paged
+        attention kernel's grid and the fallback `paged_gather` both scale
+        with the table width they are handed.  Tiny tables skip the
+        narrowing entirely: each width bucket is a fresh decode compile,
+        and below ~8 blocks the recompiles cost more than the few spare
+        block reads they save."""
+        if self.num_blocks <= 8:
+            return self.num_blocks
+        live = 1
+        for s in range(self.slots):
+            if self.slot_req[s] is not None:
+                live = max(live, len(self.slot_pages[s]))
+        return min(self.num_blocks, 1 << (live - 1).bit_length())
+
     def _with_tables(self, caches):
-        """Refresh every `table` cache leaf from the host block table."""
-        tbl = self.block_table
+        """Refresh every `table` cache leaf from the host block table,
+        narrowed to the live-width bucket (_live_table_width)."""
+        tbl = self.block_table[:, : self._live_table_width()]
 
         def one(path, leaf):
             if str(getattr(path[-1], "key", "")) == "table":
-                return jnp.asarray(np.broadcast_to(tbl, leaf.shape))
+                shape = leaf.shape[:-1] + (tbl.shape[-1],)
+                return jnp.asarray(np.broadcast_to(tbl, shape))
             return leaf
 
         return jax.tree_util.tree_map_with_path(one, caches)
@@ -585,6 +606,23 @@ class Engine:
             # Serving weight format (drives the decode weight-stream roofline;
             # see encoding.quant_weight_stream_bytes and docs/PERF.md).
             "weight_quant": self.enc.weight_quant,
+            # Resolved attention op-class backend for this engine's CURRENT
+            # decode regime (kernels/registry.py select_attn; "pallas" = the
+            # kernels/attn.py microkernels, "xla" = the jnp references).
+            # The S the dispatches actually see: the live-narrowed table
+            # width for paged caches, the ring width for sliding windows.
+            "attn_backend": registry_lib.select_attn(
+                phase=Phase.DECODE,
+                s=(
+                    self._live_table_width() * self.block_size
+                    if self.cache_mode == "paged"
+                    else min(self.max_seq, self.cfg.sliding_window)
+                    if self.cfg.sliding_window
+                    else self.max_seq
+                ),
+                target=self.enc.target,
+                requested=getattr(self.enc, "attn_backend", "xla"),
+            ).backend,
         }
         if self.spec_decode:
             st = dict(self.spec_stats)

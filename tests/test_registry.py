@@ -128,16 +128,25 @@ def test_corrupt_table_falls_back_to_policy(tmp_path):
 
 
 def test_checked_in_table_is_loadable_and_typed():
-    """The committed tuned_table.json parses and every entry is well-formed."""
+    """The committed tuned_table.json parses and every entry is well-formed
+    (both op classes: matmul quant keys and attn|phase|S-bucket keys)."""
     table = registry.load_table()
     assert table["entries"], "checked-in tuned table should not be empty"
+    seen_attn = 0
     for key, entry in table["entries"].items():
-        quant, phase, bucket, target = key.split("|")
-        assert quant in registry.QUANTS, key
-        assert bucket in registry.M_BUCKETS, key
-        assert entry["backend"] in registry.BACKENDS_BY_QUANT[quant], key
+        head, phase, bucket, target = key.split("|")
         b = entry["blocks"]
-        assert len(b) == 3 and all(isinstance(v, int) and v >= 1 for v in b), key
+        if head == registry.ATTN_OP:
+            seen_attn += 1
+            assert bucket in registry.S_BUCKETS, key
+            assert entry["backend"] in registry.ATTN_BACKENDS, key
+            assert len(b) == 2 and all(isinstance(v, int) and v >= 1 for v in b), key
+        else:
+            assert head in registry.QUANTS, key
+            assert bucket in registry.M_BUCKETS, key
+            assert entry["backend"] in registry.BACKENDS_BY_QUANT[head], key
+            assert len(b) == 3 and all(isinstance(v, int) and v >= 1 for v in b), key
+    assert seen_attn, "tuned table must cover the attention op class"
 
 
 @pytest.mark.parametrize("phase", [Phase.DECODE, Phase.PREFILL])
@@ -187,3 +196,73 @@ def test_registry_vs_direct_call_parity_all_quants(phase):
             np.asarray(auto), np.asarray(oracle), rtol=2e-4, atol=2e-4,
             err_msg=f"{quant}/{phase} vs oracle",
         )
+
+
+# ---------------------------------------------------------------------------
+# Attention op class (select_attn)
+
+
+def test_s_bucket_boundaries():
+    assert registry.s_bucket(1) == "s256"
+    assert registry.s_bucket(256) == "s256"
+    assert registry.s_bucket(257) == "s1k"
+    assert registry.s_bucket(1024) == "s1k"
+    assert registry.s_bucket(1025) == "s4k"
+    assert registry.s_bucket(4096) == "s4k"
+    assert registry.s_bucket(4097) == "sbig"
+
+
+def test_attn_requested_backend_wins_and_invalid_raises(tmp_path):
+    empty = str(tmp_path / "empty.json")
+    registry.save_table({"entries": {}}, empty)
+    for be in registry.ATTN_BACKENDS:
+        choice = registry.select_attn(
+            phase=Phase.DECODE, s=64, requested=be, table_path=empty
+        )
+        assert choice.backend == be and choice.source == "requested"
+    with pytest.raises(ValueError):
+        registry.select_attn(phase=Phase.DECODE, s=64, requested="fused")
+
+
+def test_attn_policy_and_tuned_resolution(tmp_path):
+    # Static policy on an empty table: pallas for every phase/bucket.
+    empty = str(tmp_path / "empty.json")
+    registry.save_table({"entries": {}}, empty)
+    for phase in (Phase.DECODE, Phase.PREFILL):
+        for s in (64, 512, 2048, 9000):
+            choice = registry.select_attn(phase=phase, s=s, table_path=empty)
+            assert choice.backend == "pallas" and choice.source == "default"
+    # A tuned entry (2-int blocks = (q_chunk, kv_chunk)) outranks the policy.
+    path = str(tmp_path / "table.json")
+    key = registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e")
+    registry.save_table(
+        {"entries": {key: {"backend": "xla", "blocks": [1, 64]}}}, path
+    )
+    choice = registry.select_attn(phase=Phase.DECODE, s=512, table_path=path)
+    assert choice.backend == "xla" and choice.source == "tuned"
+    assert choice.blocks == (1, 64)
+    # Explicit blocks= beat tuned blocks (mirrors the matmul class).
+    choice = registry.select_attn(
+        phase=Phase.DECODE, s=512, blocks=(1, 32), table_path=path
+    )
+    assert choice.blocks == (1, 32)
+
+
+def test_attn_unknown_target_falls_back_to_xla(tmp_path):
+    empty = str(tmp_path / "empty.json")
+    registry.save_table({"entries": {}}, empty)
+    alien = dataclasses.replace(targets_lib.TPU_V5E, name="gpu-h100")
+    choice = registry.select_attn(
+        phase=Phase.DECODE, s=512, target=alien, table_path=empty
+    )
+    assert choice.backend == "xla" and choice.source == "fallback"
+
+
+def test_attn_checked_in_table_covers_serving_buckets():
+    """The committed table carries tuned attn entries for the decode and
+    prefill serving regimes (kernel_bench --tune-attn writes them)."""
+    for phase in (Phase.DECODE, Phase.PREFILL):
+        for s in (256, 768, 2048):
+            choice = registry.select_attn(phase=phase, s=s)
+            assert choice.source == "tuned", (phase, s)
+            assert choice.backend in registry.ATTN_BACKENDS
