@@ -53,6 +53,11 @@ CHECKS = [
     ("BENCH_decode.json", "spec.dispatches_per_token", "max_abs", 0.5),
     ("BENCH_decode.json", "spec.mean_accepted_len", "min_abs", 1.05),
     ("BENCH_decode.json", "spec.token_identical", "min_abs", 1.0),
+    # -- chaos conformance (docs/ROBUSTNESS.md): under the committed
+    #    adversarial fault schedule, survivors stay token-identical to the
+    #    fault-free run and every lifecycle exit path frees its pages --
+    ("BENCH_decode.json", "chaos.token_identical_under_faults", "min_abs", 1.0),
+    ("BENCH_decode.json", "chaos.pages_leaked", "max_abs", 0.0),
     # -- wall clock, wide band (catches artificial slowdowns, not runner skew) --
     ("BENCH_decode.json", "engine.vectorized.tok_s", "baseline_frac", 0.2),
     # -- paged KV cache: deterministic scheduler outcomes (seeded stream) --

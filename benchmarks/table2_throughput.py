@@ -16,6 +16,7 @@ replaced by the mesh sweep in the dry-run.
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -27,8 +28,10 @@ from repro.core import encoding
 from repro.core.encoding import Phase, decode_projection_hbm_bytes
 from repro.core.packed import EncodingConfig
 from repro.kernels import ops, ref
+from repro.kernels import registry as kernel_registry
 from repro.models import transformer as T
 from repro.serving import engine as engine_lib
+from repro.serving import faults as faults_lib
 
 
 def _time(fn, *args, iters=5, warmup=2):
@@ -527,6 +530,116 @@ def spec_decode_bench(
     ]
 
 
+# ---- chaos conformance + guard overhead ------------------------------------
+
+
+def chaos_bench(
+    arch: str = "qwen2-1.5b",
+    *,
+    quick: bool = False,
+    out_json: str = "BENCH_decode.json",
+):
+    """Robustness gates (docs/ROBUSTNESS.md), as bench numbers:
+
+      token_identical_under_faults — 1.0 iff every request that SURVIVES the
+          committed adversarial fault schedule (tests/fault_schedules/
+          mixed_paged.json) emits exactly the fault-free run's tokens.
+          Gated at 1.0: faults may kill requests, never corrupt neighbours.
+      pages_leaked — pool pages still held once the faulted stream drains.
+          Gated at 0: every lifecycle exit path frees through the allocator.
+      guard_overhead_frac — wall-clock cost of the per-step non-finite
+          logits guard (guarded / unguarded - 1 on a clean decode stream).
+          Reported, not gated (CPU wall-clock; the guard is one (B,) device
+          reduction + transfer per step) — cited by docs/ROBUSTNESS.md.
+
+    Merges a "chaos" section into BENCH_decode.json and returns CSV rows."""
+    cfg = registry.get_reduced(arch)
+    enc = EncodingConfig(enabled=True, backend="xla")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
+    rng = np.random.RandomState(0)
+    n_req = 4 if quick else 6
+    max_new = 6 if quick else 10
+    prompts = [
+        rng.randint(1, cfg.vocab_size, rng.randint(4, 10)).astype(np.int32)
+        for _ in range(n_req)
+    ]
+
+    def run(hooks=None, *, guard=True):
+        eng = engine_lib.Engine(
+            params, cfg, enc, slots=3, max_seq=64,
+            fault_hooks=hooks,
+            clock=(hooks.clock if hooks is not None else None),
+            logits_guard=guard,
+        )
+        for i, p in enumerate(prompts):
+            assert eng.submit(
+                engine_lib.Request(uid=i, prompt=p, max_new_tokens=max_new)
+            )
+        steps = 0
+        t0 = time.perf_counter()
+        while eng.queue or any(r is not None for r in eng.slot_req):
+            assert steps < 400, "chaos bench deadlocked"
+            eng.step()
+            steps += 1
+        dt = time.perf_counter() - t0
+        if hooks is not None:
+            hooks.drain(eng)
+        eng.audit()
+        return eng, dt
+
+    # The quarantine is process-global; isolate this bench's demotions.
+    kernel_registry.clear_quarantine()
+    gold_eng, _ = run()
+    gold = {r.uid: list(r.generated) for r in gold_eng.finished}
+    sched_path = os.path.join(
+        os.path.dirname(os.path.abspath(__file__)),
+        "..", "tests", "fault_schedules", "mixed_paged.json",
+    )
+    sched = faults_lib.FaultSchedule.from_json(sched_path)
+    eng, _ = run(sched)
+    survivors = [r for r in eng.finished if r.status == "ok"]
+    identical = all(list(r.generated) == gold[r.uid] for r in survivors)
+    leaked = eng.alloc.in_use()
+    kernel_registry.clear_quarantine()
+
+    # Guard overhead on a clean stream: jit caches are warm after the runs
+    # above, so the delta is the guard's own reduction + host transfer.
+    _, t_guard = run(guard=True)
+    _, t_noguard = run(guard=False)
+    overhead = t_guard / max(t_noguard, 1e-9) - 1.0
+
+    chaos_stats = {
+        "arch": arch,
+        "mode": "quick" if quick else "full",
+        "schedule": "tests/fault_schedules/mixed_paged.json",
+        "requests": n_req,
+        "survivors": len(survivors),
+        "statuses": {r.uid: r.status for r in eng.finished},
+        "token_identical_under_faults": 1.0 if identical else 0.0,
+        "pages_leaked": float(leaked),
+        "degraded_keys": len(eng.stats["degraded"]),
+        "lifecycle": eng.stats["lifecycle"],
+        "watchdog": eng.stats["watchdog"],
+        "guard_overhead_frac": overhead,
+    }
+    try:
+        with open(out_json) as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {}
+    result["chaos"] = chaos_stats
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    return [
+        ("chaos/token_identical_under_faults",
+         chaos_stats["token_identical_under_faults"]),
+        ("chaos/pages_leaked", chaos_stats["pages_leaked"]),
+        ("chaos/survivors", float(len(survivors))),
+        ("chaos/degraded_keys", float(chaos_stats["degraded_keys"])),
+        ("chaos/guard_overhead_frac", overhead),
+    ]
+
+
 # ---- paged KV cache: pool utilization + capacity vs dense ------------------
 
 
@@ -669,6 +782,8 @@ def main(*, quick: bool = False):
     for name, val in attention_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in spec_decode_bench(quick=quick):
+        print(f"{name},{val:.4f},see-BENCH_decode.json")
+    for name, val in chaos_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in paged_cache_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_paged.json")

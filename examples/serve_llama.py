@@ -57,6 +57,14 @@ ap.add_argument("--temperature", type=float, default=0.8,
                 help="per-request sampling temperature (--sample temperature)")
 ap.add_argument("--eos-id", type=int, default=None,
                 help="stop token: slots finish early when they emit it")
+ap.add_argument("--deadline-ms", type=float, default=None,
+                help="per-request wall-clock budget (submit -> last token); "
+                     "expired requests finish with status 'expired', keeping "
+                     "what they generated (docs/ROBUSTNESS.md)")
+ap.add_argument("--max-queue", type=int, default=None,
+                help="admission-queue bound: past it submit() returns a "
+                     "structured Rejected('queue_full') instead of growing "
+                     "the queue without bound")
 args = ap.parse_args()
 
 cfg = registry.get_reduced("llama3.2-1b")
@@ -71,20 +79,26 @@ eng = engine_lib.Engine(
     cache_mode=args.cache_mode, block_size=args.block_size,
     pool_pages=args.pool_pages,
     sample=args.sample, spec_decode=args.spec_decode, draft_k=args.draft_k,
+    max_queue=args.max_queue,
 )
 
 rng = np.random.RandomState(0)
 arrival = 0.0
 t0 = time.time()
+rejections = []
 for i in range(args.requests):
     plen = rng.randint(4, 20)
     prompt = rng.randint(1, cfg.vocab_size, plen).astype(np.int32)
     if args.spec_decode and i % 2 == 0:
         prompt = np.tile(prompt[:4], 4)  # repetition-heavy cohort: drafts hit
-    eng.submit(engine_lib.Request(
+    res = eng.submit(engine_lib.Request(
         uid=i, prompt=prompt, max_new_tokens=args.max_new,
         eos_id=args.eos_id, temperature=args.temperature,
+        deadline_ms=args.deadline_ms,
     ))
+    if not res:
+        rejections.append(res)
+        print(f"  rejected uid={res.uid} ({res.reason}): {res.detail}")
 
 steps = 0
 while eng.queue or any(r is not None for r in eng.slot_req):
@@ -126,5 +140,19 @@ if stats["cache_mode"] == "paged":
           f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "
           f"shared_hits={stats['shared_hits']} cow={stats['cow_events']} "
           f"preemptions={stats['preemptions']}")
+wd = stats["watchdog"]
+print(f"  watchdog: p50={wd['p50_ms']:.1f}ms p99={wd['p99_ms']:.1f}ms "
+      f"ewma={wd['ewma_ms']:.1f}ms stalls={wd['stalls']}")
+life = stats["lifecycle"]
+outcomes = {s: sum(1 for r in eng.finished if r.status == s)
+            for s in engine_lib.REQUEST_STATUSES}
+print("  lifecycle: "
+      + " ".join(f"{k}={v}" for k, v in outcomes.items() if v)
+      + (f" rejected={life['rejected']}" if life["rejected"] else ""))
+if stats["degraded"]:
+    for d in stats["degraded"]:
+        print(f"  DEGRADED {d['key']}: {d['from']} -> {d['to']} "
+              f"(step {d['step']}, {d['reason']})")
 for r in eng.finished[:5]:
-    print(f"  req {r.uid}: |prompt|={len(r.prompt)} gen={r.generated}")
+    print(f"  req {r.uid}: |prompt|={len(r.prompt)} status={r.status} "
+          f"gen={r.generated}")

@@ -41,6 +41,16 @@ Resolution order (both classes):
   4. unknown key (unrecognized quant/phase/target): the reference path —
      dispatch must never crash on a target it has no data for.
 
+Quarantine tier (docs/ROBUSTNESS.md): a dispatch that raises, or whose
+output fails the serving engine's finite check, demotes its key down that
+same ladder for the rest of the process — `demote(key, failing_backend)`
+walks the rung list until the resolved backend CHANGES (a rung that would
+re-pick the failing kernel is no mitigation), and `select`/`select_attn`
+honour the recorded demotion level before anything else, including an
+explicit `requested` backend.  Quarantine stores only a rung offset per
+key, never code; `quarantine_snapshot()` is what Engine.stats surfaces as
+`stats["degraded"]`.
+
 The tuned table stores only data (backend name + kernel blocks), never code:
 deployment-time dispatch is a dict lookup, and re-tuning is a JSON diff.
 """
@@ -181,12 +191,104 @@ def clear_cache() -> None:
     _table_cache.clear()
 
 
+# ---- kernel quarantine ------------------------------------------------------
+#
+# Process-lifetime demotions: dispatch key -> how many rungs of the
+# requested -> tuned -> policy -> fallback ladder to skip.  Populated by the
+# serving engine when a dispatch raises or fails the finite-output check
+# (engine._quarantine_kernel); consulted by select()/select_attn() below.
+
+_quarantine: dict[str, dict] = {}
+
+
+def quarantine_level(key: str) -> int:
+    entry = _quarantine.get(key)
+    return entry["level"] if entry else 0
+
+
+def quarantine_snapshot() -> dict[str, dict]:
+    """{key: {"level", "from", "to", "reason"}} for every demoted key."""
+    return {k: dict(v) for k, v in _quarantine.items()}
+
+
+def clear_quarantine() -> None:
+    """Reset all demotions (tests; a real process never un-quarantines)."""
+    _quarantine.clear()
+
+
+def _apply_quarantine(
+    key: str, ladder: list[tuple[str, str]]
+) -> tuple[str, str]:
+    """Pick the ladder rung the key's demotion level points at.  Levels past
+    the bottom clamp to the last rung (the fallback can't be demoted)."""
+    lvl = quarantine_level(key)
+    backend, source = ladder[min(lvl, len(ladder) - 1)]
+    if lvl > 0:
+        source = f"quarantined:{source}"
+    return backend, source
+
+
+def _demote_ladder(key: str, ladder: list[tuple[str, str]], failing: str,
+                   reason: str) -> dict:
+    """Record a demotion for `key`: advance the level until the resolved
+    backend differs from `failing` (or the bottom rung is reached).  Returns
+    the quarantine record ({"level", "from", "to", "reason"})."""
+    lvl = quarantine_level(key)
+    start = min(lvl, len(ladder) - 1)
+    new = start
+    while new < len(ladder) - 1:
+        new += 1
+        if ladder[new][0] != failing:
+            break
+    record = {
+        "level": new,
+        "from": ladder[start][0],
+        "to": ladder[new][0],
+        "reason": reason,
+    }
+    _quarantine[key] = record
+    return record
+
+
 def _tuned_entry(key: str, path: str | None) -> dict | None:
     entry = load_table(path)["entries"].get(key)
     return entry if isinstance(entry, dict) else None
 
 
 # ---- the one resolution function -------------------------------------------
+
+
+def _matmul_ladder(
+    quant: str,
+    phase: Phase,
+    bucket: str,
+    target_name: str,
+    requested: str | None,
+    table_path: str | None,
+) -> list[tuple[str, str]]:
+    """The full (backend, source) rung list for one matmul key, in resolution
+    order.  Rung 0 is what select() returns with no quarantine; demotions
+    index further down."""
+    valid = BACKENDS_BY_QUANT.get(quant, ())
+    ladder: list[tuple[str, str]] = []
+    if requested not in (None, "auto"):
+        # An explicit backend is a caller decision: a name this quant mode
+        # does not understand is a bug at the call site, not a routing
+        # question — fail loudly instead of silently running the oracle.
+        if requested not in valid:
+            raise ValueError(
+                f"backend {requested!r} is not valid for quant={quant!r} "
+                f"(valid: {valid}); use 'auto' for registry routing"
+            )
+        ladder.append((requested, "requested"))
+    if _known_key(quant, phase, target_name):
+        key = f"{quant}|{phase.value}|{bucket}|{target_name}"
+        entry = _tuned_entry(key, table_path)
+        if entry is not None and entry.get("backend") in valid:
+            ladder.append((entry["backend"], "tuned"))
+        ladder.append((default_backend(quant, phase, bucket), "default"))
+    ladder.append((FALLBACK_BACKEND.get(quant, "reference"), "fallback"))
+    return ladder
 
 
 def select(
@@ -201,7 +303,9 @@ def select(
 ) -> KernelChoice:
     """Resolve one dispatch.  `requested` is the caller's backend= argument:
     "auto"/None defer to the registry; anything else is honoured verbatim
-    (still picking up tuned blocks when the caller passed none)."""
+    (still picking up tuned blocks when the caller passed none) — unless the
+    key is quarantined, which outranks even an explicit request (a pinned
+    kernel that failed the finite check must not keep serving)."""
     key = dispatch_key(quant, phase, m, getattr(target, "name", str(target)))
     entry = _tuned_entry(key, table_path)
     tuned_blocks = None
@@ -211,29 +315,56 @@ def select(
             tuned_blocks = (b[0], b[1], b[2])
     resolved_blocks = blocks if blocks is not None else tuned_blocks
 
-    valid = BACKENDS_BY_QUANT.get(quant, ())
-    if requested not in (None, "auto"):
-        # An explicit backend is a caller decision: a name this quant mode
-        # does not understand is a bug at the call site, not a routing
-        # question — fail loudly instead of silently running the oracle.
-        if requested not in valid:
-            raise ValueError(
-                f"backend {requested!r} is not valid for quant={quant!r} "
-                f"(valid: {valid}); use 'auto' for registry routing"
-            )
-        return KernelChoice(requested, resolved_blocks, "requested")
-
-    if not _known_key(quant, phase, getattr(target, "name", str(target))):
-        return KernelChoice(
-            FALLBACK_BACKEND.get(quant, "reference"), None, "fallback"
-        )
-
-    if entry is not None and entry.get("backend") in valid:
-        return KernelChoice(entry["backend"], resolved_blocks, "tuned")
-
-    return KernelChoice(
-        default_backend(quant, phase, m_bucket(m)), resolved_blocks, "default"
+    ladder = _matmul_ladder(
+        quant, phase, m_bucket(m), getattr(target, "name", str(target)),
+        requested, table_path,
     )
+    backend, source = _apply_quarantine(key, ladder)
+    if source == "fallback":
+        resolved_blocks = None if quarantine_level(key) == 0 else resolved_blocks
+    return KernelChoice(backend, resolved_blocks, source)
+
+
+def resolve_key(
+    key: str,
+    *,
+    requested: str | None = None,
+    table_path: str | None = None,
+) -> KernelChoice:
+    """Resolve a dispatch key string directly (either op class) — what
+    select()/select_attn() would return for it, quarantine included.  The
+    serving engine uses this to learn which backend is CURRENTLY serving a
+    key before demoting it."""
+    op, phase_val, bucket, target_name = key.split("|", 3)
+    phase = Phase(phase_val)
+    if op == ATTN_OP:
+        ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
+    else:
+        ladder = _matmul_ladder(op, phase, bucket, target_name, requested, table_path)
+    backend, source = _apply_quarantine(key, ladder)
+    return KernelChoice(backend, None, source)
+
+
+def demote(
+    key: str,
+    *,
+    failing: str,
+    reason: str = "",
+    requested: str | None = None,
+    table_path: str | None = None,
+) -> dict:
+    """Quarantine `key` (either op class — the key string carries its class):
+    advance its demotion level past every rung that would re-resolve to the
+    `failing` backend.  Idempotent per rung: demoting an already-demoted key
+    moves it further down; the bottom rung clamps.  Returns the quarantine
+    record the engine surfaces in stats["degraded"]."""
+    op, phase_val, bucket, target_name = key.split("|", 3)
+    phase = Phase(phase_val)
+    if op == ATTN_OP:
+        ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
+    else:
+        ladder = _matmul_ladder(op, phase, bucket, target_name, requested, table_path)
+    return _demote_ladder(key, ladder, failing, reason)
 
 
 # ---- the attention op class -------------------------------------------------
@@ -285,6 +416,34 @@ def _attn_tuned_blocks(entry: dict | None) -> tuple[int, ...] | None:
     return None
 
 
+def _attn_ladder(
+    phase: Phase,
+    bucket: str,
+    target_name: str,
+    requested: str | None,
+    table_path: str | None,
+) -> list[tuple[str, str]]:
+    """The (backend, source) rung list for one attention key — the attn
+    op-class analogue of _matmul_ladder."""
+    ladder: list[tuple[str, str]] = []
+    if requested not in (None, "auto"):
+        if requested not in ATTN_BACKENDS:
+            raise ValueError(
+                f"attention backend {requested!r} is not valid "
+                f"(valid: {ATTN_BACKENDS}); use 'auto' for registry routing"
+            )
+        ladder.append((requested, "requested"))
+    known_targets = {targets_lib.TPU_V5E.name, targets_lib.RISCV_VLEN256.name}
+    if isinstance(phase, Phase) and target_name in known_targets:
+        key = f"{ATTN_OP}|{phase.value}|{bucket}|{target_name}"
+        entry = _tuned_entry(key, table_path)
+        if entry is not None and entry.get("backend") in ATTN_BACKENDS:
+            ladder.append((entry["backend"], "tuned"))
+        ladder.append((default_attn_backend(phase, bucket), "default"))
+    ladder.append((ATTN_FALLBACK_BACKEND, "fallback"))
+    return ladder
+
+
 def select_attn(
     *,
     phase: Phase,
@@ -297,27 +456,16 @@ def select_attn(
     """Resolve one attention dispatch — the second op class, mirroring
     select(): `requested` is the caller's attn_backend (EncodingConfig /
     serve_llama --attn-backend); "auto"/None defer to tuned table -> static
-    policy -> "xla" fallback on unknown targets."""
+    policy -> "xla" fallback on unknown targets.  A quarantined key outranks
+    everything, including an explicit request."""
     target_name = getattr(target, "name", str(target))
     key = attn_dispatch_key(phase, s, target_name)
     entry = _tuned_entry(key, table_path)
     resolved_blocks = blocks if blocks is not None else _attn_tuned_blocks(entry)
 
-    if requested not in (None, "auto"):
-        if requested not in ATTN_BACKENDS:
-            raise ValueError(
-                f"attention backend {requested!r} is not valid "
-                f"(valid: {ATTN_BACKENDS}); use 'auto' for registry routing"
-            )
-        return KernelChoice(requested, resolved_blocks, "requested")
-
-    known_targets = {targets_lib.TPU_V5E.name, targets_lib.RISCV_VLEN256.name}
-    if not isinstance(phase, Phase) or target_name not in known_targets:
-        return KernelChoice(ATTN_FALLBACK_BACKEND, None, "fallback")
-
-    if entry is not None and entry.get("backend") in ATTN_BACKENDS:
-        return KernelChoice(entry["backend"], resolved_blocks, "tuned")
-
-    return KernelChoice(
-        default_attn_backend(phase, s_bucket(s)), resolved_blocks, "default"
-    )
+    bucket = s_bucket(s) if isinstance(phase, Phase) else ""
+    ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
+    backend, source = _apply_quarantine(key, ladder)
+    if source == "fallback" and quarantine_level(key) == 0:
+        resolved_blocks = None
+    return KernelChoice(backend, resolved_blocks, source)

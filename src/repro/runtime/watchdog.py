@@ -1,4 +1,4 @@
-"""Straggler detection & mitigation.
+"""Straggler detection & mitigation — and the serving decode-step watchdog.
 
 Per-step wall times feed an EWMA; a host whose step exceeds
 `threshold x EWMA` is flagged.  Mitigation is pluggable: the trainer installs
@@ -7,14 +7,25 @@ hosts via `DataReassigner` (the synthetic pipeline is keyed by (host, shard)
 so reassignment is just arithmetic), and (c) after `evict_after` consecutive
 flags, requests an elastic re-mesh (runtime/elastic.py).
 
+`DecodeStepWatchdog` promotes the same EWMA machinery into the serving
+engine's step loop (serving/engine.py wires it into Engine.stats): per-step
+latency EWMA, stall detection (a step slower than `threshold x EWMA` after
+warmup), and p50/p99 over a bounded recent-step window.  A stalled decode
+stream is the first symptom of every fault class the chaos harness injects
+(pool livelock, quarantine recompile storms, clock skew), so the watchdog is
+the observable the degradation ladder is judged by (docs/ROBUSTNESS.md).
+
 Clock is injectable so tests drive it deterministically.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import time
 from typing import Callable
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -68,6 +79,81 @@ class StepWatchdog:
 
     def should_remesh(self) -> bool:
         return bool(self.evicted)
+
+
+class DecodeStepWatchdog:
+    """Serving-side step watchdog: EWMA + stall flags + latency percentiles.
+
+    One instance per Engine.  `step_start()` / `step_end()` bracket each
+    engine step (step_end is exception-safe via try/finally in the engine
+    loop); `summary()` is merged into Engine.stats["watchdog"].  `window`
+    bounds the percentile buffer so a long-lived engine never grows state.
+    """
+
+    def __init__(
+        self,
+        cfg: WatchdogConfig = WatchdogConfig(),
+        *,
+        clock: Callable[[], float] = time.monotonic,
+        window: int = 512,
+    ):
+        self.cfg = cfg
+        self.clock = clock
+        self.ewma: float | None = None
+        self.steps = 0
+        self.stalls = 0
+        self.last_stalled = False
+        self.last_duration: float = 0.0
+        self._start: float | None = None
+        self._recent: collections.deque[float] = collections.deque(maxlen=window)
+
+    def step_start(self) -> None:
+        self._start = self.clock()
+
+    def step_end(self) -> bool:
+        """Record one step; returns True when this step counts as a stall
+        (post-warmup step slower than threshold x the running EWMA)."""
+        if self._start is None:
+            return False  # step_start never ran (exception before the bracket)
+        dur = max(self.clock() - self._start, 0.0)
+        self._start = None
+        self.steps += 1
+        self.last_duration = dur
+        self._recent.append(dur)
+        stalled = (
+            self.steps > self.cfg.warmup_steps
+            and self.ewma is not None
+            and dur > self.cfg.threshold * self.ewma
+        )
+        if stalled:
+            self.stalls += 1
+            # A stall is an outlier by definition: folding it into the EWMA
+            # at full weight would teach the watchdog that stalls are normal.
+            # Clamp the sample to the flag threshold before updating.
+            dur = self.cfg.threshold * self.ewma
+        self.last_stalled = bool(stalled)
+        if self.ewma is None:
+            self.ewma = dur
+        else:
+            a = self.cfg.ewma_alpha
+            self.ewma = a * dur + (1 - a) * self.ewma
+        return bool(stalled)
+
+    def percentile(self, q: float) -> float:
+        if not self._recent:
+            return 0.0
+        return float(np.percentile(np.asarray(self._recent), q))
+
+    def summary(self) -> dict:
+        return {
+            "steps": self.steps,
+            "ewma_ms": 1e3 * (self.ewma or 0.0),
+            "last_ms": 1e3 * self.last_duration,
+            "p50_ms": 1e3 * self.percentile(50),
+            "p99_ms": 1e3 * self.percentile(99),
+            "stalls": self.stalls,
+            "stalled": self.last_stalled,
+        }
 
 
 class DataReassigner:

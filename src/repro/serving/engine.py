@@ -38,12 +38,30 @@ model's own next token, and rolls rejected tokens back (dense: masked until
 overwritten; paged: trailing pages freed — audit() stays exact).  Output is
 token-identical to plain greedy decode for any drafter; acceptance only buys
 dispatch amortization (docs/PERF.md §Speculative decode).
+
+Hardened request lifecycle (docs/ROBUSTNESS.md): every request carries a
+status (queued -> running -> ok | cancelled | expired | error | rejected).
+`submit` is backpressured — a bounded admission queue and up-front
+serviceability checks return a structured `Rejected(reason)` instead of
+admitting work that can only thrash — and step boundaries honour
+`Request.cancel()` and per-request `deadline_ms` (pages freed through the
+same `_finish_slot` path as normal completion, so `audit()` stays exact).
+Committed logits pass a non-finite guard: a NaN/inf row quarantines only the
+offending slot (finish-with-error; co-batched rows commit normally), and a
+dispatch that raises demotes its registry key down the requested -> tuned ->
+policy -> fallback ladder (kernels/registry.demote) for the rest of the
+process, recorded in stats["degraded"].  A DecodeStepWatchdog
+(runtime/watchdog.py) brackets every step: EWMA step latency, stall flags,
+p50/p99 — surfaced in stats["watchdog"].  All fault paths are driven through
+injectable hooks (`fault_hooks`, `clock`) so the chaos layer
+(serving/faults.py) needs no monkeypatching.
 """
 
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable
 
 import jax
@@ -54,6 +72,8 @@ from repro.core.encoding import Phase
 from repro.core.packed import EncodingConfig
 from repro.kernels import registry as registry_lib
 from repro.models import transformer as T
+from repro.runtime import watchdog as watchdog_lib
+from repro.serving import faults as faults_lib
 from repro.serving import paged as paged_lib
 from repro.serving import spec as spec_lib
 
@@ -238,6 +258,11 @@ def count_calls(fn):
     return wrapped
 
 
+REQUEST_STATUSES = (
+    "queued", "running", "ok", "cancelled", "expired", "error", "rejected",
+)
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -255,6 +280,46 @@ class Request:
     # served this request): drafts offered / drafts accepted.
     draft_proposed: int = 0
     draft_accepted: int = 0
+    # ---- lifecycle (docs/ROBUSTNESS.md) ------------------------------------
+    # Wall-clock budget from submit() to last token, in ms of the ENGINE's
+    # clock (injectable).  None = no deadline.  Checked at step boundaries:
+    # an expired request finishes with status "expired", keeping whatever it
+    # generated so far.
+    deadline_ms: float | None = None
+    status: str = "queued"
+    error: str | None = None
+    cancel_requested: bool = False
+    submit_t: float | None = None     # engine clock at submit()
+
+    def cancel(self) -> None:
+        """Ask the engine to drop this request.  Honoured at the next step
+        boundary (and again at commit time, so a cancel landing while a
+        draft window is in flight never emits another token)."""
+        self.cancel_requested = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Admitted:
+    """submit() accepted the request into the admission queue."""
+
+    uid: int
+
+    def __bool__(self) -> bool:
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """submit() refused the request — structured backpressure, never an
+    unbounded queue.  `reason` is machine-readable ("queue_full" |
+    "unserviceable_seq" | "unserviceable_pool"); `detail` is for humans."""
+
+    uid: int
+    reason: str
+    detail: str = ""
+
+    def __bool__(self) -> bool:
+        return False
 
 
 class Engine:
@@ -325,6 +390,10 @@ class Engine:
         spec_decode: bool = False,
         draft_k: int = 4,
         drafter: Callable | None = None,
+        max_queue: int | None = None,
+        clock: Callable[[], float] | None = None,
+        fault_hooks=None,
+        logits_guard: bool = True,
     ):
         assert decode_mode in ("vectorized", "grouped"), decode_mode
         assert cache_mode in ("paged", "dense"), cache_mode
@@ -332,6 +401,29 @@ class Engine:
         self.params, self.cfg, self.enc = params, cfg, enc
         self.slots = slots
         self.max_seq = max_seq
+        # ---- lifecycle / robustness (docs/ROBUSTNESS.md) -------------------
+        # max_queue: admission-queue bound — submit() returns Rejected
+        #   ("queue_full") past it instead of growing without bound.
+        # clock: injectable monotonic clock (seconds) for deadlines and the
+        #   step watchdog; the chaos layer passes FaultSchedule.clock so
+        #   clock-skew faults are visible.
+        # fault_hooks: object with on_step_begin / pre_dispatch /
+        #   corrupt_slots / held_pages (serving/faults.FaultSchedule) —
+        #   injection points, all no-ops when None.
+        # logits_guard: non-finite check on committed logits; quarantines the
+        #   offending slot only (measured overhead in docs/ROBUSTNESS.md).
+        self.max_queue = max_queue
+        self.clock = clock if clock is not None else time.monotonic
+        self.hooks = fault_hooks
+        self.logits_guard = bool(logits_guard)
+        self.watchdog = watchdog_lib.DecodeStepWatchdog(clock=self.clock)
+        self.rejected: list[Request] = []
+        self.degraded: list[dict] = []
+        self.lifecycle = {
+            "rejected": 0, "cancelled": 0, "expired": 0,
+            "kernel_faults": 0, "guard_trips": 0,
+        }
+        self.step_count = 0
         attn_only = all(t == "attn" for t in cfg.block_pattern)
         # Vectorized decode is only sound for attention KV caches, where an
         # inactive row's write lands at a masked position.  Recurrent state
@@ -351,14 +443,6 @@ class Engine:
         self.sample = sample
         self._base_key = jax.random.PRNGKey(seed)
         self._step_idx = 0
-        self.prefill_fn = jax.jit(make_prefill_step(cfg, enc))
-        # Vectorized mode replaces the caches wholesale each step, so the old
-        # buffers can be donated (in-place update on device, no copy).  The
-        # grouped path re-reads self.caches after the call (merge) — no donate.
-        donate = (1,) if decode_mode == "vectorized" else ()
-        self.decode_fn = jax.jit(
-            make_decode_step(cfg, enc, sample=sample), donate_argnums=donate
-        )
         # Speculative decode needs the position-masked attention reads of the
         # vectorized attn-only path (rejected drafts stay masked garbage) and
         # greedy-exact acceptance — sampled decode has no greedy target to
@@ -373,8 +457,8 @@ class Engine:
             and self.draft_k > 0
         )
         self.drafter = drafter if drafter is not None else spec_lib.propose
+        self._rebuild_dispatch_fns()
         if self.spec_decode:
-            self.verify_fn = jax.jit(make_verify_step(cfg, enc), donate_argnums=(1,))
             self.spec_stats = {
                 "steps": 0,          # engine steps served by a verify dispatch
                 "slot_steps": 0,     # per-slot verify participations
@@ -418,25 +502,252 @@ class Engine:
             and cfg.sliding_window == 0
         )
 
-    def submit(self, req: Request):
+    def _reject(self, req: Request, reason: str, detail: str) -> Rejected:
+        req.status = "rejected"
+        req.error = detail
+        req.done = True
+        self.rejected.append(req)
+        self.lifecycle["rejected"] += 1
+        return Rejected(req.uid, reason, detail)
+
+    def submit(self, req: Request) -> Admitted | Rejected:
+        """Admit `req` into the bounded queue, or refuse it with a structured
+        reason — backpressure (queue_full) and up-front serviceability checks
+        (a request that cannot ever fit the cache or the pool is rejected
+        here, not admitted to preempt-thrash; the pool bound is the
+        kv_capacity_requests math from core/encoding.py, applied to one
+        request).  The result is truthy iff admitted."""
+        req.submit_t = self.clock()
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            return self._reject(
+                req, "queue_full",
+                f"admission queue at max_queue={self.max_queue}; retry later",
+            )
+        if len(req.prompt) > self.max_seq:
+            return self._reject(
+                req, "unserviceable_seq",
+                f"prompt of {len(req.prompt)} tokens exceeds max_seq "
+                f"{self.max_seq}",
+            )
         if self.cache_mode == "paged" and req.max_new_tokens > 0:
-            # Reject unserviceable requests up front: the most pages the
-            # request can ever hold (decode stops at max_seq) must fit the
-            # pool, or admission could never run it.
+            # The most pages the request can ever hold (decode stops at
+            # max_seq) must fit the pool, or admission could never run it —
+            # this is blocks_per_request from encoding.kv_capacity_requests
+            # evaluated at the request's own worst case.
             worst_pos = min(len(req.prompt) + req.max_new_tokens, self.max_seq) - 1
             worst = worst_pos // self.block_size + 1
             if worst > self.alloc.capacity:
-                raise ValueError(
-                    f"request {req.uid} can need {worst} pages but the pool "
-                    f"holds {self.alloc.capacity}; grow pool_pages or shrink "
-                    "the request"
+                return self._reject(
+                    req, "unserviceable_pool",
+                    f"request can need {worst} pages but the pool holds "
+                    f"{self.alloc.capacity}; grow pool_pages or shrink the "
+                    "request",
                 )
         self.queue.append(req)
+        return Admitted(req.uid)
+
+    # ---- guarded dispatch + kernel quarantine ------------------------------
+
+    def _rebuild_dispatch_fns(self) -> None:
+        """(Re)jit the serving dispatches.  Called at construction and after
+        a kernel quarantine: a fresh jit object retraces on next call, so the
+        model re-resolves its registry keys against the demoted ladder."""
+        self.prefill_fn = jax.jit(make_prefill_step(self.cfg, self.enc))
+        # Vectorized mode replaces the caches wholesale each step, so the old
+        # buffers can be donated (in-place update on device, no copy).  The
+        # grouped path re-reads self.caches after the call (merge) — no donate.
+        donate = (1,) if self.decode_mode == "vectorized" else ()
+        self.decode_fn = jax.jit(
+            make_decode_step(self.cfg, self.enc, sample=self.sample),
+            donate_argnums=donate,
+        )
+        if self.spec_decode:
+            self.verify_fn = jax.jit(
+                make_verify_step(self.cfg, self.enc), donate_argnums=(1,)
+            )
+
+    def _attn_s(self, phase: Phase) -> int:
+        """The logical KV length the next dispatch of `phase` attends — the
+        S that keys its attention registry entry (mirrors stats)."""
+        if phase is Phase.PREFILL:
+            return self.max_seq
+        if self.cache_mode == "paged":
+            return self._live_table_width() * self.block_size
+        if self.cfg.sliding_window:
+            return min(self.max_seq, self.cfg.sliding_window)
+        return self.max_seq
+
+    def _dispatch_keys(self, kind: str) -> tuple[str, ...]:
+        """Registry keys the imminent dispatch resolves through: its
+        attention key plus its matmul key (quant mode x phase x M-bucket).
+        These are what pre_dispatch faults match and what a quarantine
+        demotes."""
+        phase = Phase.PREFILL if kind == "prefill" else Phase.DECODE
+        target_name = getattr(self.enc.target, "name", str(self.enc.target))
+        quant = {"none": "none", "int8": "w8a8", "int4": "w4a8"}.get(
+            getattr(self.enc, "weight_quant", "none"), "none"
+        )
+        m = {
+            "prefill": self.slots * self.max_seq,
+            "decode": self.slots,
+            "verify": self.slots * (1 + self.draft_k),
+        }[kind]
+        return (
+            registry_lib.attn_dispatch_key(phase, self._attn_s(phase), target_name),
+            registry_lib.dispatch_key(quant, phase, m, target_name),
+        )
+
+    def _requested_for(self, key: str) -> str | None:
+        """The caller-pinned backend for a key's op class (the `requested`
+        rung of its ladder) — attn_backend for attention keys, the encoding
+        backend for matmul keys."""
+        if key.startswith(registry_lib.ATTN_OP + "|"):
+            return getattr(self.enc, "attn_backend", None)
+        return getattr(self.enc, "backend", None)
+
+    def _quarantine_kernel(self, key: str, reason: str) -> dict:
+        """Demote `key` to the next rung of its dispatch ladder for the rest
+        of the process (kernels/registry.demote), record it in
+        stats["degraded"], and rebuild the jitted dispatches so the next
+        trace resolves the demoted backend."""
+        requested = self._requested_for(key)
+        before = registry_lib.resolve_key(key, requested=requested)
+        record = registry_lib.demote(
+            key, failing=before.backend, reason=reason, requested=requested
+        )
+        entry = {"key": key, "step": self.step_count, **record}
+        self.degraded.append(entry)
+        self.lifecycle["kernel_faults"] += 1
+        self._rebuild_dispatch_fns()
+        if self.cache_mode == "paged":
+            self._tables_dirty = True
+        return entry
+
+    def _dispatch(self, kind: str, fn_attr: str, *args):
+        """Run one jitted dispatch through the fault/quarantine boundary:
+        pre_dispatch hooks may raise a (simulated) KernelFaultError; a raise
+        quarantines the named key and retries on the demoted rung.  Bounded
+        by the ladder depth — a dispatch that still fails at the fallback
+        rung propagates (there is nothing left to degrade to)."""
+        for _attempt in range(4):
+            keys = self._dispatch_keys(kind)
+            try:
+                if self.hooks is not None:
+                    self.hooks.pre_dispatch(self, kind, keys)
+                return getattr(self, fn_attr)(*args)
+            except faults_lib.KernelFaultError as exc:
+                self._quarantine_kernel(exc.key, reason=str(exc))
+                continue
+        raise faults_lib.KernelFaultError(
+            keys[0], "kernel dispatch still failing at the fallback rung"
+        )
+
+    # ---- lifecycle: deadlines, cancellation, the non-finite guard ----------
+
+    def _past_deadline(self, req: Request) -> bool:
+        return (
+            req.deadline_ms is not None
+            and req.submit_t is not None
+            and (self.clock() - req.submit_t) * 1e3 > req.deadline_ms
+        )
+
+    def _finish_queued(self, req: Request, status: str, error: str | None) -> None:
+        req.done = True
+        req.status = status
+        req.error = error
+        self.finished.append(req)
+        self.lifecycle[status] = self.lifecycle.get(status, 0) + 1
+
+    def _reap_lifecycle(self) -> None:
+        """Step-boundary lifecycle sweep: cancelled and deadline-expired
+        requests finish NOW, queued or running — running slots free their
+        pages through the same _finish_slot path as normal completion, so
+        the allocator audit stays exact."""
+        if self.queue and any(
+            r.cancel_requested or self._past_deadline(r) for r in self.queue
+        ):
+            kept: collections.deque[Request] = collections.deque()
+            for req in self.queue:
+                if req.cancel_requested:
+                    self._finish_queued(req, "cancelled", "cancelled while queued")
+                elif self._past_deadline(req):
+                    self._finish_queued(
+                        req, "expired",
+                        f"deadline_ms={req.deadline_ms} exceeded while queued",
+                    )
+                else:
+                    kept.append(req)
+            self.queue = kept
+        for s in range(self.slots):
+            req = self.slot_req[s]
+            if req is None:
+                continue
+            if req.cancel_requested:
+                self._finish_slot(s, status="cancelled", error="cancelled mid-flight")
+            elif self._past_deadline(req):
+                self._finish_slot(
+                    s, status="expired",
+                    error=f"deadline_ms={req.deadline_ms} exceeded mid-flight",
+                )
+
+    def _guard_slots(self, logits, active: list[int]) -> frozenset[int]:
+        """The non-finite guard: slots whose logit rows this step are not
+        finite (hook-injected corruption included — the chaos layer NaNs
+        rows here so the REAL guard sees real non-finite data).  One (B,)
+        device reduction + host transfer per step; overhead measured in
+        benchmarks (docs/ROBUSTNESS.md)."""
+        if self.hooks is not None:
+            forced = self.hooks.corrupt_slots(self, active)
+            if forced:
+                logits = logits.at[jnp.asarray(forced, jnp.int32)].set(jnp.nan)
+        if not self.logits_guard:
+            return frozenset()
+        ok = np.asarray(
+            jnp.all(jnp.isfinite(logits), axis=tuple(range(1, logits.ndim)))
+        )
+        bad = frozenset(s for s in active if not ok[s])
+        if bad:
+            self.lifecycle["guard_trips"] += len(bad)
+        return bad
+
+    def poison_slot_kv(self, s: int) -> None:
+        """Overwrite slot `s`'s most recent KV storage with NaN — the chaos
+        layer's cache-poisoning injection (a kernel writing garbage K/V).
+        The slot's next logits go non-finite and the guard quarantines it;
+        pages are slot-private unless prefix-shared, so co-batched slots
+        only see the poison when they genuinely share the page."""
+        nan = jnp.nan
+        if self.cache_mode == "paged":
+            if not self.slot_pages[s]:
+                return
+            page = self.slot_pages[s][-1]
+
+            def one(path, leaf):
+                if str(getattr(path[-1], "key", "")) == "table":
+                    return leaf
+                if _batch_axis(path) == 1:
+                    return leaf.at[:, page].set(nan)
+                return leaf.at[page].set(nan)
+
+        else:
+            pos = max(int(self.slot_pos[s]) - 1, 0)
+
+            def one(path, leaf):
+                if str(getattr(path[-1], "key", "")) == "table":
+                    return leaf
+                if leaf.ndim < 2:
+                    return leaf
+                if _batch_axis(path) == 1:
+                    return leaf.at[:, s, pos % leaf.shape[2]].set(nan)
+                return leaf.at[s, pos % leaf.shape[1]].set(nan)
+
+        self.caches = jax.tree_util.tree_map_with_path(one, self.caches)
 
     # ---- paged admission / page management ---------------------------------
 
     def _finish_degenerate(self, req: Request) -> None:
         req.done = True
+        req.status = "ok"
         self.finished.append(req)
 
     def _admit_paged(self):
@@ -473,12 +784,16 @@ class Engine:
         for i, (_, r, _) in enumerate(batch):
             toks[i, : len(r.prompt)] = r.prompt
         tmp = T.cache_init(self.cfg, len(batch), lp)
-        _, tmp = self.prefill_fn(self.params, jnp.asarray(toks), tmp)
+        _, tmp = self._dispatch(
+            "prefill", "prefill_fn", self.params, jnp.asarray(toks), tmp
+        )
         self._scatter_prefill(tmp, batch)
         for s, r, plan in batch:
             self.slot_req[s] = r
+            r.status = "running"
             self.slot_pos[s] = len(r.prompt)
             self.slot_pages[s] = list(plan.pages)
+            self.alloc.claim_owner(plan.pages, s)
             self.block_table[s, :] = paged_lib.SCRATCH_PAGE
             self.block_table[s, : len(plan.pages)] = plan.pages
             self.slot_ticket[s] = self._ticket
@@ -559,7 +874,8 @@ class Engine:
         req = self.slot_req[s]
         req.generated.clear()
         req.draft_proposed = req.draft_accepted = 0  # replay re-accounts
-        self.alloc.free_pages(self.slot_pages[s])
+        req.status = "queued"
+        self.alloc.free_pages(self.slot_pages[s], owner=s)
         self.slot_pages[s] = []
         self.block_table[s, :] = paged_lib.SCRATCH_PAGE
         self.slot_req[s] = None
@@ -623,6 +939,13 @@ class Engine:
                 target=self.enc.target,
                 requested=getattr(self.enc, "attn_backend", "xla"),
             ).backend,
+            # ---- robustness observables (docs/ROBUSTNESS.md) ---------------
+            "steps": self.step_count,
+            "watchdog": self.watchdog.summary(),
+            "lifecycle": dict(self.lifecycle),
+            # Kernel-quarantine events this process: [{key, step, level,
+            # from, to, reason}] — the degradation ladder's audit trail.
+            "degraded": [dict(d) for d in self.degraded],
         }
         if self.spec_decode:
             st = dict(self.spec_stats)
@@ -648,13 +971,24 @@ class Engine:
         return out
 
     def audit(self) -> None:
-        """Assert allocator/table consistency (tests call this every step)."""
+        """Assert allocator/table consistency (tests call this every step).
+        Pages seized by an active fault schedule (pool_spike holds) are
+        legitimate references, not leaks — fold them in as one extra table
+        so the exact-partition check keeps holding under chaos."""
         if self.cache_mode != "paged":
             return
-        self.alloc.audit(
-            [self.slot_pages[s] for s in range(self.slots)
-             if self.slot_req[s] is not None]
+        tables = [
+            self.slot_pages[s] for s in range(self.slots)
+            if self.slot_req[s] is not None
+        ]
+        held = (
+            list(self.hooks.held_pages())
+            if self.hooks is not None and hasattr(self.hooks, "held_pages")
+            else []
         )
+        if held:
+            tables = tables + [held]
+        self.alloc.audit(tables)
 
     # ---- dense admission ---------------------------------------------------
 
@@ -667,8 +1001,7 @@ class Engine:
             req = self.queue.popleft()
             if req.max_new_tokens <= 0:
                 # Degenerate request: nothing to decode — never occupies a slot.
-                req.done = True
-                self.finished.append(req)
+                self._finish_degenerate(req)
                 continue
             batch.append((free.pop(0), req))
         if not batch:
@@ -686,7 +1019,9 @@ class Engine:
             for i, (_, r) in enumerate(batch):
                 toks[i, : len(r.prompt)] = r.prompt
             part = slot_gather(self.caches, slots_sel)
-            _, part = self.prefill_fn(self.params, jnp.asarray(toks), part)
+            _, part = self._dispatch(
+                "prefill", "prefill_fn", self.params, jnp.asarray(toks), part
+            )
             self.caches = slot_merge(
                 self.caches, part, slots_sel, list(range(len(batch)))
             )
@@ -695,22 +1030,34 @@ class Engine:
                 # Per-slot prefill: batch of 1 through a slot-sliced cache view.
                 toks = jnp.asarray(r.prompt, jnp.int32)[None]
                 slot_cache = slot_slice(self.caches, s)
-                _, slot_cache = self.prefill_fn(self.params, toks, slot_cache)
+                _, slot_cache = self._dispatch(
+                    "prefill", "prefill_fn", self.params, toks, slot_cache
+                )
                 self.caches = slot_merge(self.caches, slot_cache, [s], [0])
         for s, r in batch:
             self.slot_req[s] = r
+            r.status = "running"
             self.slot_pos[s] = len(r.prompt)
 
-    def _finish_slot(self, s: int) -> None:
+    def _finish_slot(self, s: int, *, status: str = "ok",
+                     error: str | None = None) -> None:
+        """Retire slot `s` with a terminal status.  EVERY slot exit — normal
+        completion, cancel, deadline expiry, guard trip — funnels through
+        here, so page release and table reset are a single code path the
+        allocator audit can hold exactly."""
         req = self.slot_req[s]
         req.done = True
+        req.status = status
+        req.error = error
         self.finished.append(req)
+        if status != "ok":
+            self.lifecycle[status] = self.lifecycle.get(status, 0) + 1
         self.slot_req[s] = None
         self.slot_pos[s] = 0  # freed rows decode (discarded) at pos 0
         if self.cache_mode == "paged":
             # Freed-on-finish: every page back to the pool (shared pages by
             # refcount), table row back to scratch.
-            self.alloc.free_pages(self.slot_pages[s])
+            self.alloc.free_pages(self.slot_pages[s], owner=s)
             self.slot_pages[s] = []
             self.block_table[s, :] = paged_lib.SCRATCH_PAGE
             self._tables_dirty = True
@@ -735,8 +1082,31 @@ class Engine:
                 break
         return emitted
 
-    def _commit(self, slots_sel: list[int], nxt: np.ndarray) -> int:
-        return sum(self._commit_tokens(s, [int(nxt[s, 0])]) for s in slots_sel)
+    def _commit(
+        self, slots_sel: list[int], nxt: np.ndarray,
+        bad: frozenset[int] = frozenset(),
+    ) -> int:
+        """Commit this dispatch's tokens.  `bad` slots (non-finite logits)
+        finish with status "error" and emit nothing; a cancel that landed
+        while the dispatch was in flight is honoured HERE — the request
+        never sees a token sampled after its cancel."""
+        emitted = 0
+        for s in slots_sel:
+            if self.slot_req[s] is None:
+                continue
+            if s in bad:
+                self._finish_slot(
+                    s, status="error",
+                    error="non-finite logits (guard tripped)",
+                )
+                continue
+            if self.slot_req[s].cancel_requested:
+                self._finish_slot(
+                    s, status="cancelled", error="cancelled mid-dispatch"
+                )
+                continue
+            emitted += self._commit_tokens(s, [int(nxt[s, 0])])
+        return emitted
 
     # ---- speculative decode (prompt-lookup draft + batched verify) ---------
 
@@ -833,9 +1203,11 @@ class Engine:
         for s in active:
             mat[s, 1 : 1 + drafts[s].size] = drafts[s]
         pos_vec = np.maximum(self.slot_pos.astype(np.int32) - 1, 0)
-        logits, self.caches = self.verify_fn(
-            self.params, self.caches, jnp.asarray(mat), jnp.asarray(pos_vec)
+        logits, self.caches = self._dispatch(
+            "verify", "verify_fn",
+            self.params, self.caches, jnp.asarray(mat), jnp.asarray(pos_vec),
         )
+        bad = self._guard_slots(logits, active)
         # tgt[s, j]: the model's greedy token AFTER consuming mat[s, :j+1] —
         # the acceptance target for draft j and the bonus token at the cut.
         tgt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
@@ -843,6 +1215,20 @@ class Engine:
         st["steps"] += 1
         emitted = 0
         for s in active:
+            if s in bad:
+                self._finish_slot(
+                    s, status="error",
+                    error="non-finite logits (guard tripped, verify)",
+                )
+                continue
+            if self.slot_req[s].cancel_requested:
+                # The cancel landed while the draft window was in flight: no
+                # token from this verify is ever emitted; the slot's pages
+                # (draft positions included) free through _finish_slot.
+                self._finish_slot(
+                    s, status="cancelled", error="cancelled mid-dispatch"
+                )
+                continue
             d = drafts[s]
             a = 0
             while a < d.size and int(d[a]) == int(tgt[s, a]):
@@ -866,8 +1252,22 @@ class Engine:
     # ---- the engine loop ---------------------------------------------------
 
     def step(self) -> int:
-        """One engine iteration: admit + ONE decode (or ONE speculative
-        verify) dispatch for every active slot."""
+        """One engine iteration: fire fault hooks, reap cancelled/expired
+        requests, admit, then ONE decode (or ONE speculative verify)
+        dispatch for every active slot — bracketed by the step watchdog
+        (exception-safe: a dispatch that raises still records its
+        latency)."""
+        self.step_count += 1
+        self.watchdog.step_start()
+        try:
+            return self._step_inner()
+        finally:
+            self.watchdog.step_end()
+
+    def _step_inner(self) -> int:
+        if self.hooks is not None:
+            self.hooks.on_step_begin(self)
+        self._reap_lifecycle()
         self._admit()
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
@@ -907,10 +1307,10 @@ class Engine:
                 jnp.asarray(last_tokens), jnp.asarray(pos_vec),
             )
             if self.sample == "temperature":
-                nxt, _, self.caches = self.decode_fn(*args, *self._sample_args(active))
-            else:
-                nxt, _, self.caches = self.decode_fn(*args)
-            return self._commit(active, np.asarray(nxt))
+                args = args + self._sample_args(active)
+            nxt, logits, self.caches = self._dispatch("decode", "decode_fn", *args)
+            bad = self._guard_slots(logits, active)
+            return self._commit(active, np.asarray(nxt), bad)
         # Grouped baseline: slots admitted with different prompt lengths decode
         # on their own pos via per-pos grouping; each group's cache rows merge
         # back selectively so other groups' histories stay untouched.
@@ -924,11 +1324,11 @@ class Engine:
                 jnp.asarray(last_tokens), jnp.asarray(p - 1, jnp.int32),
             )
             if self.sample == "temperature":
-                nxt, _, new_caches = self.decode_fn(*args, *self._sample_args(slots))
-            else:
-                nxt, _, new_caches = self.decode_fn(*args)
+                args = args + self._sample_args(slots)
+            nxt, logits, new_caches = self._dispatch("decode", "decode_fn", *args)
             self.caches = slot_merge(self.caches, new_caches, slots)
-            emitted += self._commit(slots, np.asarray(nxt))
+            bad = self._guard_slots(logits, slots)
+            emitted += self._commit(slots, np.asarray(nxt), bad)
         return emitted
 
     def run(self) -> list[Request]:

@@ -37,6 +37,26 @@ import numpy as np
 SCRATCH_PAGE = 0
 
 
+class AllocatorInvariantError(AssertionError):
+    """A page-accounting invariant broke: double free, refcount underflow,
+    sharing an unreferenced page, or a stale prefix-registry reference.
+    Carries the page id and (when the engine told the allocator) the slot
+    that owned the page, so a leak report names the request lifecycle path
+    that dropped it.  Subclasses AssertionError: every pre-existing
+    `pytest.raises(AssertionError)` / audit() contract still holds."""
+
+    def __init__(self, message: str, *, page: int | None = None,
+                 owner: int | None = None):
+        suffix = ""
+        if page is not None:
+            suffix = f" (page {page}" + (
+                f", owning slot {owner})" if owner is not None else ")"
+            )
+        super().__init__(message + suffix)
+        self.page = page
+        self.owner = owner
+
+
 @dataclasses.dataclass
 class PagePlan:
     """Physical pages covering one prompt, leading `shared` pages reused."""
@@ -64,6 +84,9 @@ class BlockAllocator:
         self.refcount = np.zeros(num_pages, np.int32)
         self.registry: dict[bytes, int] = {}   # token-prefix key -> page
         self.page_key: dict[int, bytes] = {}   # page -> its registry key
+        # Last slot the engine charged each live page to (diagnostics only:
+        # AllocatorInvariantError names it; shared pages keep the first owner).
+        self.page_owner: dict[int, int] = {}
         self.stats = {
             "allocs": 0, "frees": 0, "shared_hits": 0, "cow_events": 0,
             "peak_in_use": 0,
@@ -86,31 +109,52 @@ class BlockAllocator:
 
     # -- raw page ops --------------------------------------------------------
 
-    def alloc(self) -> int | None:
+    def alloc(self, *, owner: int | None = None) -> int | None:
         if not self.free:
             return None
         page = self.free.pop()
-        assert self.refcount[page] == 0, page
+        if self.refcount[page] != 0:
+            raise AllocatorInvariantError(
+                "free-list page has live refcount "
+                f"{int(self.refcount[page])}", page=page,
+                owner=self.page_owner.get(page),
+            )
         self.refcount[page] = 1
+        if owner is not None:
+            self.page_owner[page] = owner
         self.stats["allocs"] += 1
         self.stats["peak_in_use"] = max(self.stats["peak_in_use"], self.in_use())
         return page
 
-    def share(self, page: int) -> int:
-        assert self.refcount[page] > 0, f"sharing unreferenced page {page}"
+    def share(self, page: int, *, owner: int | None = None) -> int:
+        if self.refcount[page] <= 0:
+            raise AllocatorInvariantError(
+                "sharing unreferenced page", page=page,
+                owner=self.page_owner.get(page),
+            )
         self.refcount[page] += 1
         self.stats["shared_hits"] += 1
+        if owner is not None:
+            self.page_owner.setdefault(page, owner)
         return page
 
-    def free_page(self, page: int) -> None:
+    def free_page(self, page: int, *, owner: int | None = None) -> None:
         if page == SCRATCH_PAGE:
             return
-        assert self.refcount[page] > 0, f"double free of page {page}"
+        if self.refcount[page] <= 0:
+            # Double free / refcount underflow: typed, with the page id and
+            # the slot that last owned it — the leak report the chaos harness
+            # (docs/ROBUSTNESS.md) pins failures on.
+            raise AllocatorInvariantError(
+                "double free (refcount underflow)", page=page,
+                owner=owner if owner is not None else self.page_owner.get(page),
+            )
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
             key = self.page_key.pop(page, None)
             if key is not None and self.registry.get(key) == page:
                 del self.registry[key]
+            self.page_owner.pop(page, None)
             self.free.append(page)
             self.stats["frees"] += 1
 
@@ -172,9 +216,15 @@ class BlockAllocator:
             is_shared.append(False)
         return PagePlan(pages=pages, shared=is_shared)
 
-    def free_pages(self, pages: list[int]) -> None:
+    def free_pages(self, pages: list[int], *, owner: int | None = None) -> None:
         for p in pages:
-            self.free_page(p)
+            self.free_page(p, owner=owner)
+
+    def claim_owner(self, pages: list[int], owner: int) -> None:
+        """Record which slot a plan's pages now serve (diagnostics for
+        AllocatorInvariantError; shared pages keep their first owner)."""
+        for p in pages:
+            self.page_owner.setdefault(p, owner)
 
     # -- invariants ----------------------------------------------------------
 
@@ -186,6 +236,9 @@ class BlockAllocator:
           * refcounts equal the number of table references exactly,
           * a page referenced by two tables is in the prefix registry
             (sharing happens only through prefix reuse),
+          * the token-prefix registry holds no refs to freed pages (a stale
+            registry entry would hand a future prompt a recycled page whose
+            K/V belongs to someone else — silent cross-request corruption),
           * free + in-use partitions the pool (scratch excluded)."""
         refs: dict[int, int] = {}
         for table in tables_in_use:
@@ -203,6 +256,22 @@ class BlockAllocator:
                 assert p in self.page_key, f"page {p} multiply-owned unregistered"
         for p in range(1, self.num_pages):
             if p not in refs:
-                assert self.refcount[p] == 0, f"page {p} leaked (rc>0, unreferenced)"
+                if self.refcount[p] != 0:
+                    raise AllocatorInvariantError(
+                        f"page leaked (rc={int(self.refcount[p])}, "
+                        "unreferenced)", page=p, owner=self.page_owner.get(p),
+                    )
                 assert p in free_set, f"page {p} neither free nor referenced"
         assert len(free_set) + len(refs) == self.capacity
+        # The prefix registry must reference only live pages, consistently:
+        # a freed page left registered would be handed to a future prompt as
+        # "already holding your prefix K/V" after recycling.
+        for key, p in self.registry.items():
+            if p in free_set or self.refcount[p] <= 0:
+                raise AllocatorInvariantError(
+                    "prefix registry references a freed page", page=p,
+                    owner=self.page_owner.get(p),
+                )
+            assert self.page_key.get(p) == key, (
+                f"registry/page_key disagree for page {p}"
+            )

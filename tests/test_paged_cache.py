@@ -179,13 +179,18 @@ def test_engine_rejects_unserviceable_request():
         block_size=4, pool_pages=4,
     )
     # Rejected at submit, before any page could be committed: a half-admitted
-    # batch must never be abandoned mid-flight.
-    with pytest.raises(ValueError, match="pool"):
-        eng.submit(engine_lib.Request(
-            uid=0, prompt=np.arange(1, 30, dtype=np.int32), max_new_tokens=8,
-        ))
+    # batch must never be abandoned mid-flight.  Structured backpressure:
+    # submit returns a falsy Rejected(reason) rather than raising.
+    res = eng.submit(engine_lib.Request(
+        uid=0, prompt=np.arange(1, 30, dtype=np.int32), max_new_tokens=8,
+    ))
+    assert not res
+    assert isinstance(res, engine_lib.Rejected)
+    assert res.reason == "unserviceable_pool"
+    assert "pool" in res.detail
     eng.audit()
     assert eng.alloc.available() == eng.alloc.capacity
+    assert not eng.queue and eng.rejected[0].status == "rejected"
 
 
 # ---------------------------------------------------------------------------
