@@ -58,6 +58,13 @@ CHECKS = [
     #    fault-free run and every lifecycle exit path frees its pages --
     ("BENCH_decode.json", "chaos.token_identical_under_faults", "min_abs", 1.0),
     ("BENCH_decode.json", "chaos.pages_leaked", "max_abs", 0.0),
+    # -- continuous batching: the token-budget acceptance bar.  A long
+    #    prompt admitted mid-decode costs ZERO decode-stall steps (the
+    #    1-token-per-decode-row budget floor), stays token-identical to the
+    #    phase-split engine, and leaks nothing --
+    ("BENCH_decode.json", "continuous.decode_stall_steps", "max_abs", 0.0),
+    ("BENCH_decode.json", "continuous.token_identical", "min_abs", 1.0),
+    ("BENCH_decode.json", "continuous.pages_leaked", "max_abs", 0.0),
     # -- wall clock, wide band (catches artificial slowdowns, not runner skew) --
     ("BENCH_decode.json", "engine.vectorized.tok_s", "baseline_frac", 0.2),
     # -- paged KV cache: deterministic scheduler outcomes (seeded stream) --

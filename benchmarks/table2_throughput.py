@@ -640,6 +640,120 @@ def chaos_bench(
     ]
 
 
+# ---- continuous batching: token-budget mixed prefill+decode ----------------
+
+
+def continuous_bench(
+    arch: str = "qwen2-1.5b",
+    *,
+    quick: bool = False,
+    out_json: str = "BENCH_decode.json",
+):
+    """Token-budget continuous batching (serving/engine.py): a LONG prompt is
+    admitted while two short requests are mid-decode, and the whole stream
+    runs through the unified mixed chunked-prefill + decode dispatch.
+
+      decode_stall_steps — steps where a live decoding slot emitted nothing
+          (the metric the scheduler exists for).  Gated at 0: the budget
+          reserves a 1-token floor per decode row before any chunk is
+          packed, so prefill NEVER pauses decode.
+      token_identical — 1.0 iff every request (the long one included) emits
+          exactly what the phase-split engine emits on the same arrival
+          pattern.  Gated at 1.0.
+      pages_leaked — pool pages still held after drain.  Gated at 0.
+      p99_step_ms_* — per-step wall clock, mixed vs phase-split.  The
+          phase-split engine prefills the long prompt in ONE dispatch, so
+          its tail step is the whole prefill; the mixed engine's steps are
+          budget-bounded.  Reported, not gated (CPU wall clock, compiles
+          included) — cited by docs/PERF.md §Token-budget scheduling.
+
+    Merges a "continuous" section into BENCH_decode.json, returns CSV rows."""
+    cfg = registry.get_reduced(arch)
+    enc = EncodingConfig(enabled=True, backend="xla")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
+    rng = np.random.RandomState(0)
+    long_len = 256 if quick else 4096
+    budget = 32 if quick else 128
+    # Shorts must still be decoding when the long prefill finishes, or the
+    # stall gate would have nothing to measure: prefill takes about
+    # long_len / (budget - decode_rows) mixed steps.
+    max_new_short = 24 if quick else 48
+    shorts = [
+        rng.randint(1, cfg.vocab_size, 8).astype(np.int32) for _ in range(2)
+    ]
+    long_p = rng.randint(1, cfg.vocab_size, long_len).astype(np.int32)
+    max_seq = long_len + 64
+
+    def run(token_budget):
+        eng = engine_lib.Engine(
+            params, cfg, enc, slots=3, max_seq=max_seq,
+            cache_mode="paged", block_size=16, token_budget=token_budget,
+        )
+        for i, p in enumerate(shorts):
+            assert eng.submit(
+                engine_lib.Request(uid=i, prompt=p, max_new_tokens=max_new_short)
+            )
+        step_ms: list[float] = []
+        steps = 0
+        while eng.queue or any(r is not None for r in eng.slot_req):
+            assert steps < 4000, "continuous bench deadlocked"
+            if steps == 2:  # long prompt arrives mid-decode
+                assert eng.submit(
+                    engine_lib.Request(uid=9, prompt=long_p, max_new_tokens=4)
+                )
+            t0 = time.perf_counter()
+            eng.step()
+            step_ms.append((time.perf_counter() - t0) * 1e3)
+            steps += 1
+        eng.audit()
+        return eng, np.asarray(step_ms)
+
+    kernel_registry.clear_quarantine()
+    split_eng, split_ms = run(None)
+    gold = {r.uid: list(r.generated) for r in split_eng.finished}
+    mix_eng, mix_ms = run(budget)
+    got = {r.uid: list(r.generated) for r in mix_eng.finished}
+    identical = got == gold
+    kernel_registry.clear_quarantine()
+
+    c = mix_eng.stats["continuous"]
+    cont_stats = {
+        "arch": arch,
+        "mode": "quick" if quick else "full",
+        "token_budget": budget,
+        "long_prompt_len": long_len,
+        "decode_stall_steps": float(c["decode_stall_steps"]),
+        "token_identical": 1.0 if identical else 0.0,
+        "pages_leaked": float(mix_eng.alloc.in_use()),
+        "mixed_steps": c["mixed_steps"],
+        "chunked_admissions": c["chunked_admissions"],
+        "completed_prefills": c["completed_prefills"],
+        "prefill_tokens": c["prefill_tokens"],
+        "decode_tokens": c["decode_tokens"],
+        "steps_mixed": int(mix_ms.size),
+        "steps_split": int(split_ms.size),
+        "p99_step_ms_mixed": float(np.percentile(mix_ms, 99)),
+        "p99_step_ms_split": float(np.percentile(split_ms, 99)),
+        "max_step_ms_mixed": float(mix_ms.max()),
+        "max_step_ms_split": float(split_ms.max()),
+    }
+    try:
+        with open(out_json) as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {}
+    result["continuous"] = cont_stats
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    return [
+        ("continuous/decode_stall_steps", cont_stats["decode_stall_steps"]),
+        ("continuous/token_identical", cont_stats["token_identical"]),
+        ("continuous/pages_leaked", cont_stats["pages_leaked"]),
+        ("continuous/p99_step_ms_mixed", cont_stats["p99_step_ms_mixed"]),
+        ("continuous/p99_step_ms_split", cont_stats["p99_step_ms_split"]),
+    ]
+
+
 # ---- paged KV cache: pool utilization + capacity vs dense ------------------
 
 
@@ -784,6 +898,8 @@ def main(*, quick: bool = False):
     for name, val in spec_decode_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in chaos_bench(quick=quick):
+        print(f"{name},{val:.4f},see-BENCH_decode.json")
+    for name, val in continuous_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in paged_cache_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_paged.json")

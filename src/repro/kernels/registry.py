@@ -120,14 +120,18 @@ def default_backend(quant: str, phase: Phase, bucket: str = "") -> str:
     Decode at GEMV-like row counts ("m1", "m8" — one to a batch of slots)
     takes the fused path (pack/unpack-free, the bandwidth regime's win).
     Past that ("m32": the speculative-decode verify window, slots x
-    (draft_k+1) rows; "m64": many-slot decode) the fused GEMV's premise
-    breaks — it keeps the whole (M, K) activation block VMEM-resident per
-    streamed weight tile, a footprint that grows with M — so multi-row
-    decode routes to the packed mmt4d GEMM, the same kernel the prefill
-    slab uses (one verify kernel path, TinyIREE's keep-dispatch-small
-    argument).  The policy is monotonic in M by design; a target where the
-    fused GEMV measures faster at some bucket says so through its tuned
-    entry (tpu-v5e's m64 entries pin "fused"), which outranks this policy.
+    (draft_k+1) rows; "m64": many-slot decode; "big": the token-budget
+    mixed step, slots x window rows when chunked-prefill tokens pack into
+    the decode dispatch) the fused GEMV's premise breaks — it keeps the
+    whole (M, K) activation block VMEM-resident per streamed weight tile,
+    a footprint that grows with M — so multi-row decode routes to the
+    packed mmt4d GEMM, the same kernel the prefill slab uses (one verify
+    kernel path, TinyIREE's keep-dispatch-small argument).  The policy is
+    monotonic in M by design ("big" included — it used to fall through to
+    "fused", which silently handed a GEMM-shaped mixed window to the
+    row-resident GEMV); a target where the fused GEMV measures faster at
+    some bucket says so through its tuned entry (tpu-v5e's m64 entries pin
+    "fused"), which outranks this policy.
     Prefill takes the fused GEMM slab for unquantized weights and the
     packed Pallas kernel for quantized ones (their fused slab does not
     exist — the packed kernel already streams int operands).
@@ -137,7 +141,7 @@ def default_backend(quant: str, phase: Phase, bucket: str = "") -> str:
     backend out of the table being regenerated (a stale entry must not
     self-perpetuate across retunes)."""
     if phase is Phase.DECODE:
-        return "pallas" if bucket in ("m32", "m64") else "fused"
+        return "pallas" if bucket in ("m32", "m64", "big") else "fused"
     return "fused" if quant == "none" else "pallas"
 
 

@@ -1,6 +1,12 @@
 """End-to-end serving driver: continuous-batching engine on a reduced model.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --requests 8
+
+Token-budget continuous batching (one mixed chunked-prefill + decode
+dispatch per step, serving/engine.py) with streamed output:
+
+  PYTHONPATH=src python -m repro.launch.serve --token-budget 64 \
+      --slo-class interactive --stream
 """
 
 from __future__ import annotations
@@ -31,15 +37,31 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="paged pool size; small values force preemption")
+    ap.add_argument("--token-budget", type=int, default=None,
+                    help="per-step token budget: run the unified mixed "
+                         "chunked-prefill + decode scheduler instead of the "
+                         "phase-split engine")
+    ap.add_argument("--slo-class", default="standard",
+                    choices=sorted(engine_lib.SLO_CLASSES),
+                    help="SLO class stamped on every submitted request "
+                         "(admission priority under --token-budget)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print tokens as they are committed (stream_cb)")
     args = ap.parse_args()
 
     cfg = registry.get_reduced(args.arch)
     enc = EncodingConfig(enabled=True, backend=args.backend, interpret=True)
     params = T.model_init(jax.random.PRNGKey(args.seed), cfg, enc)
+
+    def stream_cb(req, tok):
+        print(f"  [stream] req {req.uid} += {tok} "
+              f"({len(req.generated)}/{req.max_new_tokens})")
+
     eng = engine_lib.Engine(
         params, cfg, enc, slots=args.slots, max_seq=args.max_seq,
         cache_mode=args.cache_mode, block_size=args.block_size,
-        pool_pages=args.pool_pages,
+        pool_pages=args.pool_pages, token_budget=args.token_budget,
+        stream_cb=stream_cb if args.stream else None,
     )
 
     rng = np.random.RandomState(args.seed)
@@ -47,7 +69,10 @@ def main():
     for i in range(args.requests):
         plen = rng.randint(args.prompt_len // 2, args.prompt_len + 1)
         prompt = rng.randint(1, cfg.vocab_size, size=plen).astype(np.int32)
-        eng.submit(engine_lib.Request(uid=i, prompt=prompt, max_new_tokens=args.max_new))
+        eng.submit(engine_lib.Request(
+            uid=i, prompt=prompt, max_new_tokens=args.max_new,
+            slo_class=args.slo_class,
+        ))
     done = eng.run()
     dt = time.time() - t0
     total_new = sum(len(r.generated) for r in done)
@@ -58,6 +83,11 @@ def main():
         print(f"[serve] paged: peak_active={stats['peak_active']} "
               f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "
               f"shared_hits={stats['shared_hits']} preemptions={stats['preemptions']}")
+    if "continuous" in stats:
+        c = stats["continuous"]
+        print(f"[serve] continuous: budget={c['token_budget']} "
+              f"mixed_steps={c['mixed_steps']} decode_stalls={c['decode_stall_steps']} "
+              f"prefill_tok={c['prefill_tokens']} decode_tok={c['decode_tokens']}")
     for r in done[: min(4, len(done))]:
         print(f"  req {r.uid}: prompt[:4]={r.prompt[:4].tolist()} -> gen[:8]={r.generated[:8]}")
     return done

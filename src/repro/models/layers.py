@@ -338,10 +338,21 @@ def attention_apply(
     `pos` may be a scalar (all rows share a position — prefill offset or
     uniform decode) or a (B,) vector (position-vectorized decode: each batch
     row carries its own position of x[:, 0]; DECODE only).  At DECODE, S > 1
-    is the speculative-decode verify window — row b's S tokens occupy
-    positions pos_b .. pos_b+S-1, all S K/V pairs are written, and attention
-    is masked-causal inside the window; full attention only (window == 0 —
-    attention_decode rejects ring caches for S > 1).
+    is a per-row masked-causal window — row b's S tokens occupy positions
+    pos_b .. pos_b+S-1, all S K/V pairs are written, and attention is
+    masked-causal inside the window; full attention only (window == 0 —
+    attention_decode rejects ring caches for S > 1).  Two callers ride it:
+    the speculative-decode verify window, and the token-budget mixed step
+    (serving/engine.py), where decode rows carry 1 real token (+ drafts) and
+    chunked-prefill rows carry a window of prompt tokens at pos_b = tokens
+    already cached — `slot <= pos_b + j` is exactly chunked-prefill masking
+    (full history + causal-in-window), so one dispatch serves both phases.
+    Window positions past a row's real content (padding to the rectangular
+    S) write garbage K/V at FUTURE positions only — masked until a later
+    real write lands there first, the same contract rejected spec drafts
+    rely on.  The engine caps S so pos_b + S <= max cache length for every
+    participating row; the write indexing below still clamps defensively so
+    an out-of-contract pad can never scatter outside the row's cache.
     """
     b, s, d = x.shape
     h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
@@ -388,7 +399,11 @@ def attention_apply(
         posv = jnp.asarray(pos)
         posm = (posv[:, None] if posv.ndim == 1 else posv) + jnp.arange(s)
         posm = jnp.broadcast_to(posm, (b, s))
-        pg = table[jnp.arange(b)[:, None], posm // bs_page]  # (B, S)
+        # Window pads past the last logical block clamp to the final table
+        # entry (scratch unless the row's table is full — and the engine
+        # caps the window so a full row never pads past max_seq).
+        blk = jnp.minimum(posm // bs_page, table.shape[1] - 1)
+        pg = table[jnp.arange(b)[:, None], blk]  # (B, S)
         off = posm % bs_page
         k_pool = cache["k"].at[pg, off].set(k)
         v_pool = cache["v"].at[pg, off].set(v)
@@ -415,10 +430,16 @@ def attention_apply(
         s_c = cache["k"].shape[1]
         if pos_vec:
             # Per-row scatter: row i writes its own S cache slots (one token
-            # per position pos_i + j; S > 1 is the spec-decode verify window,
-            # whose rejected-draft writes stay masked until overwritten).
+            # per position pos_i + j; S > 1 is the spec-decode verify window
+            # or a mixed-step prefill chunk, whose beyond-content writes stay
+            # masked until overwritten).  Full-attention windows clamp at the
+            # cache edge: the engine caps S per row, so a clamped index is
+            # only ever a pad colliding with other pads.
             positions = jnp.asarray(pos)[:, None] + jnp.arange(s)  # (B, S)
-            wslot = jnp.mod(positions, s_c) if window > 0 else positions
+            wslot = (
+                jnp.mod(positions, s_c) if window > 0
+                else jnp.minimum(positions, s_c - 1)
+            )
             k_cache = cache["k"].at[jnp.arange(b)[:, None], wslot].set(k)
             v_cache = cache["v"].at[jnp.arange(b)[:, None], wslot].set(v)
         else:

@@ -171,6 +171,7 @@ def forward(
     caches: dict | None = None,
     pos: jnp.ndarray | int = 0,
     last_logits_only: bool = False,
+    logits_idx: jnp.ndarray | None = None,
 ) -> tuple[jnp.ndarray, dict | None, jnp.ndarray]:
     """Returns (logits, new_caches, aux_loss).
 
@@ -178,10 +179,15 @@ def forward(
     (B,P,Dv) for vision).  For decode, S == 1 and `pos` is the position of the
     incoming token — either a scalar shared by every row, or a (B,) vector of
     per-row positions (position-vectorized decode: one dispatch serves batch
-    rows at different sequence depths; serving/engine.py).  last_logits_only:
-    emit logits for the final position only (serving prefill — avoids
-    materializing the (B, S, V) tensor).
-    """
+    rows at different sequence depths; serving/engine.py).  S > 1 at DECODE is
+    a masked-causal window (the spec-decode verify window, or the token-budget
+    mixed step's per-row chunk of prompt tokens riding the same machinery).
+    last_logits_only: emit logits for the final position only (serving
+    prefill — avoids materializing the (B, S, V) tensor).  logits_idx: (B, K)
+    int32 — emit logits only at these per-row window positions (B, K, V);
+    the mixed step reads at most 1 + draft_k positions per row, so the head
+    matmul must not scale with the chunk width S.  Overrides
+    last_logits_only."""
     tokens = batch["tokens"]
     b, s = tokens.shape
     d = cfg.d_model
@@ -263,7 +269,12 @@ def forward(
             x, aux = xc, aux_c
             new_caches["tail"] = tuple(new_tc)
 
-    if last_logits_only:
+    if logits_idx is not None:
+        # Per-row logit gather: row b keeps positions logits_idx[b] only.
+        # (B, S, D) -> (B, K, D) before the head/tied-embed matmul.
+        idx = jnp.asarray(logits_idx, jnp.int32)
+        x = jnp.take_along_axis(x, idx[..., None], axis=1)
+    elif last_logits_only:
         x = x[:, -1:, :]
     x = L.norm_apply(params["final_norm"], x, cfg)
     if cfg.tie_embeddings:

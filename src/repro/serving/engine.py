@@ -207,6 +207,39 @@ def make_verify_step(cfg, enc: EncodingConfig) -> Callable:
     return verify
 
 
+def make_mixed_step(cfg, enc: EncodingConfig) -> Callable:
+    """Token-budget mixed step: chunked prefill and decode in ONE dispatch.
+
+    mixed(params, caches, tokens, pos, logits_idx) -> (logits, caches).
+    tokens is (B, L) int32 — row b's window is EITHER its last committed
+    token plus draft tokens (a decoding slot; exactly make_verify_step's
+    contract) OR the next chunk of its prompt (a prefilling slot) — and pos
+    is (B,) int32, the absolute position of tokens[:, 0].  Both row kinds
+    want the same decode-phase forward: the per-row multi-position cache
+    scatter and the masked-causal window mask `slot <= pos_b + j` ARE
+    chunked prefill when the window holds prompt tokens (models/layers.py
+    attention_apply documents the contract).  logits_idx is (B, K) int32:
+    per-row window indices whose hidden states are gathered BEFORE the
+    output head (models/transformer.py), so a chunk row pays for K logit
+    rows, never L — a 4k-token prompt chunk costs no (chunk, vocab) logits.
+    """
+
+    def mixed(params, caches, tokens, pos, logits_idx):
+        logits, caches, _ = T.forward(
+            params,
+            {"tokens": tokens},
+            cfg=cfg,
+            enc=enc,
+            phase=Phase.DECODE,
+            caches=caches,
+            pos=pos,
+            logits_idx=logits_idx,
+        )
+        return logits, caches
+
+    return mixed
+
+
 def _batch_axis(path) -> int:
     """Cache leaves under "groups" carry a leading layer-stack dim: batch is
     axis 1 there, axis 0 in the tail."""
@@ -290,6 +323,11 @@ class Request:
     error: str | None = None
     cancel_requested: bool = False
     submit_t: float | None = None     # engine clock at submit()
+    # SLO class for the token-budget scheduler ("interactive" | "standard" |
+    # "batch"; unknown values rank as "standard").  Queue ordering ages by
+    # enqueued_step (stamped by submit()) so no class starves.
+    slo_class: str = "standard"
+    enqueued_step: int | None = None
 
     def cancel(self) -> None:
         """Ask the engine to drop this request.  Honoured at the next step
@@ -320,6 +358,70 @@ class Rejected:
 
     def __bool__(self) -> bool:
         return False
+
+
+# Lower rank = more urgent.  Unknown classes rank as "standard".
+SLO_CLASSES = {"interactive": 0, "standard": 1, "batch": 2}
+
+
+class TokenBudgetScheduler:
+    """Admission / budget-split / preemption policy for the token-budget
+    mixed step (`Engine(token_budget=...)`; docs/PERF.md §Token budget).
+
+    Admission order: SLO class rank (interactive < standard < batch) with
+    starvation-free aging — every `aging_steps` engine steps a request
+    spends queued promote it one class, so a batch request enqueued long
+    enough eventually outranks a steady stream of fresh interactive ones.
+    Ties break FIFO (enqueued_step, then submission order).
+
+    Budget split per step: decode rows are funded first (1 token per row —
+    the zero-stall floor), then spec drafts (spec.draft_budget), and
+    chunked prefill takes what remains — never less than 1 token per
+    prefill row, so an over-subscribed budget still makes prompt progress
+    instead of livelocking admission.
+
+    Preemption (pool pressure): victim = max (class rank, admission
+    ticket) — batch rows evict before standard before interactive, ties to
+    the latest admission.  Aging protects QUEUE order only; a running
+    interactive row never loses its pages to an aged batch row.
+    """
+
+    def __init__(self, budget: int, *, aging_steps: int = 64):
+        if budget < 1:
+            raise ValueError(f"token_budget must be >= 1, got {budget}")
+        self.budget = int(budget)
+        self.aging_steps = max(1, int(aging_steps))
+
+    def rank(self, req: Request) -> int:
+        return SLO_CLASSES.get(req.slo_class, SLO_CLASSES["standard"])
+
+    def queue_key(self, req: Request, now_step: int) -> tuple[int, int]:
+        """Sort key for queued requests (lower = admitted first)."""
+        enq = req.enqueued_step if req.enqueued_step is not None else now_step
+        waited = max(0, now_step - enq)
+        return (self.rank(req) - waited // self.aging_steps, enq)
+
+    def victim_key(self, req: Request, ticket: int) -> tuple[int, int]:
+        """Sort key for preemption victims (the MAX is evicted)."""
+        return (self.rank(req), int(ticket))
+
+    def split_chunks(
+        self, decode_cost: int, remaining: dict[int, int], order: list[int],
+    ) -> dict[int, int]:
+        """Chunk sizes for this step's prefill rows.  `remaining[s]` prompt
+        tokens are left on row s; `order` is priority order; decode rows
+        (drafts included) already spent `decode_cost` of the budget.  Every
+        row gets at least 1 token (forward progress), the leftover budget
+        goes to the highest-priority rows first."""
+        spare = max(self.budget - int(decode_cost), len(order))
+        chunks = {s: 1 for s in order}
+        spare -= len(order)
+        for s in order:
+            add = min(remaining[s] - 1, spare)
+            if add > 0:
+                chunks[s] += add
+                spare -= add
+        return chunks
 
 
 class Engine:
@@ -370,6 +472,23 @@ class Engine:
     the pool (`audit()` stays exact).  Requires attention-only, no sliding
     window, vectorized decode, greedy sampling; anything else switches it
     off.
+
+    token_budget: unified continuous batching (Sarathi-style).  Every step
+    runs ONE mixed decode-phase dispatch whose (B, L) window packs decode
+    rows (1 token each, or their spec-verify window) beside chunked-prefill
+    rows (each spending a slice of the remaining budget on its prompt), so
+    a long prompt admitted mid-decode streams into the cache WITHOUT ever
+    pausing decode — zero decode-stall steps by construction, gated in
+    benchmarks/check_regression.py.  Admission order, per-step budget
+    split, and preemption ordering come from TokenBudgetScheduler
+    (Request.slo_class + starvation-free aging).  A prefill row's final
+    chunk yields its first generated token in the same dispatch, so output
+    is token-identical to the phase-split engine.  Needs the spec-verify
+    machinery (attention-only, no sliding window, vectorized decode,
+    greedy); anything else turns it off and the phase-split path remains.
+
+    stream_cb: optional callable (req, token) invoked synchronously as each
+    token is committed — streaming output for servers (launch/serve.py).
     """
 
     def __init__(
@@ -394,6 +513,9 @@ class Engine:
         clock: Callable[[], float] | None = None,
         fault_hooks=None,
         logits_guard: bool = True,
+        token_budget: int | None = None,
+        slo_aging_steps: int = 64,
+        stream_cb: Callable[[Request, int], None] | None = None,
     ):
         assert decode_mode in ("vectorized", "grouped"), decode_mode
         assert cache_mode in ("paged", "dense"), cache_mode
@@ -457,6 +579,37 @@ class Engine:
             and self.draft_k > 0
         )
         self.drafter = drafter if drafter is not None else spec_lib.propose
+        # Token-budget continuous batching rides the spec-verify machinery
+        # (position-masked attention reads, per-row pos vectors, greedy
+        # commit); any configuration that cannot run a verify window cannot
+        # run a mixed window either, so it degrades to the phase-split path
+        # the same way spec_decode does.
+        if token_budget is not None and not (
+            attn_only
+            and cfg.sliding_window == 0
+            and self.decode_mode == "vectorized"
+            and sample == "greedy"
+        ):
+            token_budget = None
+        self.token_budget = int(token_budget) if token_budget is not None else None
+        self.scheduler = (
+            TokenBudgetScheduler(self.token_budget, aging_steps=slo_aging_steps)
+            if self.token_budget is not None
+            else None
+        )
+        self.stream_cb = stream_cb
+        self._mixed_m = slots        # M of the imminent mixed dispatch
+        self._window_blocks = 0      # table width the mixed window needs
+        if self.scheduler is not None:
+            self.continuous = {
+                "token_budget": self.token_budget,
+                "mixed_steps": 0,
+                "decode_tokens": 0,        # decode-row window tokens dispatched
+                "prefill_tokens": 0,       # prompt chunk tokens dispatched
+                "decode_stall_steps": 0,   # steps where live decode rows emitted 0
+                "chunked_admissions": 0,
+                "completed_prefills": 0,
+            }
         self._rebuild_dispatch_fns()
         if self.spec_decode:
             self.spec_stats = {
@@ -485,6 +638,14 @@ class Engine:
                 (slots, self.num_blocks), paged_lib.SCRATCH_PAGE, np.int32
             )
             self.slot_pages: list[list[int]] = [[] for _ in range(slots)]
+            # Prompt pages whose content has actually been WRITTEN (chunked
+            # prefill writes lazily, but commit_prompt registers pages for
+            # prefix sharing immediately — a later admission may only treat
+            # a shared page as valid history once its owner's chunks have
+            # covered it; see _admit_budget).  Pages re-entering a plan as
+            # private are invalidated there, so re-allocated pages can never
+            # carry a stale marker into a future share.
+            self._prompt_pages_written: set[int] = set()
             self.slot_ticket = np.zeros(slots, np.int64)
             self._ticket = 0
             self._tables_dirty = True
@@ -494,6 +655,10 @@ class Engine:
             self.caches = T.cache_init(cfg, slots, max_seq)
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
+        # Prompt tokens already in the slot's cache — equals len(prompt) the
+        # moment (batch) prefill runs; strictly less only mid-chunked-prefill
+        # under the token-budget scheduler.
+        self.slot_prefill_done = np.zeros(slots, np.int64)
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self.batch_prefill = (
@@ -518,6 +683,7 @@ class Engine:
         kv_capacity_requests math from core/encoding.py, applied to one
         request).  The result is truthy iff admitted."""
         req.submit_t = self.clock()
+        req.enqueued_step = self.step_count
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             return self._reject(
                 req, "queue_full",
@@ -565,6 +731,10 @@ class Engine:
             self.verify_fn = jax.jit(
                 make_verify_step(self.cfg, self.enc), donate_argnums=(1,)
             )
+        if getattr(self, "token_budget", None) is not None:
+            self.mixed_fn = jax.jit(
+                make_mixed_step(self.cfg, self.enc), donate_argnums=(1,)
+            )
 
     def _attn_s(self, phase: Phase) -> int:
         """The logical KV length the next dispatch of `phase` attends — the
@@ -591,6 +761,10 @@ class Engine:
             "prefill": self.slots * self.max_seq,
             "decode": self.slots,
             "verify": self.slots * (1 + self.draft_k),
+            # The mixed window's M is slots x L, set per step — wide chunk
+            # windows land in the "big" bucket, which routes to the packed
+            # mmt4d GEMM (kernels/registry.py default policy).
+            "mixed": self._mixed_m,
         }[kind]
         return (
             registry_lib.attn_dispatch_key(phase, self._attn_s(phase), target_name),
@@ -657,6 +831,23 @@ class Engine:
         req.error = error
         self.finished.append(req)
         self.lifecycle[status] = self.lifecycle.get(status, 0) + 1
+
+    def _admission_reap(self, req: Request) -> None:
+        """Companion to the _reap_lifecycle sweep: the sweep reads the clock
+        ONCE at the step boundary, but admission runs later in the same step
+        (after prefill planning and page commits), so a deadline can lapse —
+        or a cancel land — in between.  Without this re-check an
+        already-dead request is admitted, prefilled, and only reaped a full
+        step later: wasted dispatch work and, paged, pool pages committed to
+        a corpse that can preempt a live request.  Caller has already popped
+        `req` from the queue."""
+        if req.cancel_requested:
+            self._finish_queued(req, "cancelled", "cancelled while queued")
+        else:
+            self._finish_queued(
+                req, "expired",
+                f"deadline_ms={req.deadline_ms} exceeded at admission",
+            )
 
     def _reap_lifecycle(self) -> None:
         """Step-boundary lifecycle sweep: cancelled and deadline-expired
@@ -759,6 +950,12 @@ class Engine:
                 self.queue.popleft()
                 self._finish_degenerate(req)
                 continue
+            if req.cancel_requested or self._past_deadline(req):
+                # Deadline/cancel re-check at admission time (the _reap
+                # sweep's snapshot can lapse within the same step).
+                self.queue.popleft()
+                self._admission_reap(req)
+                continue
             nblocks, shared = self.alloc.plan_prompt(req.prompt)
             if nblocks - len(shared) > self.alloc.available():
                 break  # pool pressure: stop admitting (FIFO order preserved)
@@ -792,6 +989,7 @@ class Engine:
             self.slot_req[s] = r
             r.status = "running"
             self.slot_pos[s] = len(r.prompt)
+            self.slot_prefill_done[s] = len(r.prompt)
             self.slot_pages[s] = list(plan.pages)
             self.alloc.claim_owner(plan.pages, s)
             self.block_table[s, :] = paged_lib.SCRATCH_PAGE
@@ -848,7 +1046,12 @@ class Engine:
         block reads they save."""
         if self.num_blocks <= 8:
             return self.num_blocks
-        live = 1
+        # The mixed step widens the table to cover its whole window, pads
+        # included: a pad past the table width would clamp onto the row's
+        # LAST REAL page (models/layers.py) and corrupt committed history,
+        # while inside the width it lands on scratch or a masked future
+        # offset of a private page.  _window_blocks is 0 outside mixed steps.
+        live = max(1, self._window_blocks)
         for s in range(self.slots):
             if self.slot_req[s] is not None:
                 live = max(live, len(self.slot_pages[s]))
@@ -880,33 +1083,51 @@ class Engine:
         self.block_table[s, :] = paged_lib.SCRATCH_PAGE
         self.slot_req[s] = None
         self.slot_pos[s] = 0
+        self.slot_prefill_done[s] = 0  # replay re-runs (chunked) prefill
         self.queue.appendleft(req)
         self._tables_dirty = True
         self.preemptions += 1
 
+    def _victim_key(self, v: int):
+        """Preemption priority — the MAX of this key over live slots is
+        evicted.  Phase-split engines keep the original rule (latest
+        admission ticket).  Under the token-budget scheduler, SLO class
+        outranks ticket: batch rows evict before standard before
+        interactive, ties to the latest admission (aging protects queue
+        order only; a running interactive row never loses its pages to an
+        aged batch row — docs/ROBUSTNESS.md)."""
+        if self.scheduler is not None:
+            return self.scheduler.victim_key(self.slot_req[v], self.slot_ticket[v])
+        return self.slot_ticket[v]
+
     def _ensure_decode_pages(self, extra: int = 0) -> None:
         """Decode growth: each active slot must own the page its next token
         writes into — and, with `extra` > 0 (the speculative-decode verify
-        window), the pages of the `extra` draft positions after it too.
-        Allocate at block boundaries; when the pool is dry, preempt the
-        lowest-priority slot (latest admission ticket) until a page frees —
-        possibly the requesting slot itself."""
-        order = sorted(
-            (s for s in range(self.slots) if self.slot_req[s] is not None),
-            key=lambda s: self.slot_ticket[s],
-        )
+        window), the pages of the `extra` draft positions after it too."""
+        self._ensure_pages({
+            s: max(int(self.slot_pos[s]) - 1, 0) + extra
+            for s in range(self.slots)
+            if self.slot_req[s] is not None
+        })
+
+    def _ensure_pages(self, ends: dict[int, int]) -> None:
+        """Grow each slot's pages to cover its last write position
+        (`ends[s]`, absolute — the mixed step passes per-row window ends).
+        Allocate at block boundaries in admission order; when the pool is
+        dry, preempt the lowest-priority slot (_victim_key) until a page
+        frees — possibly the requesting slot itself."""
+        order = sorted(ends, key=lambda s: self.slot_ticket[s])
         for s in order:
             if self.slot_req[s] is None:
                 continue  # preempted while serving an earlier slot
-            pos = max(int(self.slot_pos[s]) - 1, 0) + extra
-            need = pos // self.block_size + 1
+            need = ends[s] // self.block_size + 1
             while self.slot_req[s] is not None and len(self.slot_pages[s]) < need:
                 page = self.alloc.alloc()
                 if page is None:
                     victims = [
                         v for v in range(self.slots) if self.slot_req[v] is not None
                     ]
-                    victim = max(victims, key=lambda v: self.slot_ticket[v])
+                    victim = max(victims, key=self._victim_key)
                     self._preempt(victim)
                     continue
                 self.slot_pages[s].append(page)
@@ -958,6 +1179,8 @@ class Engine:
             st["per_slot_accepted"] = self.slot_accepted.tolist()
             out["spec"] = st
             out["draft_k"] = self.draft_k
+        if self.scheduler is not None:
+            out["continuous"] = dict(self.continuous)
         if self.cache_mode == "paged":
             out.update(self.alloc.stats)
             out.update(
@@ -993,6 +1216,8 @@ class Engine:
     # ---- dense admission ---------------------------------------------------
 
     def _admit(self):
+        if self.scheduler is not None:
+            return self._admit_budget()
         if self.cache_mode == "paged":
             return self._admit_paged()
         free = [s for s in range(self.slots) if self.slot_req[s] is None]
@@ -1002,6 +1227,11 @@ class Engine:
             if req.max_new_tokens <= 0:
                 # Degenerate request: nothing to decode — never occupies a slot.
                 self._finish_degenerate(req)
+                continue
+            if req.cancel_requested or self._past_deadline(req):
+                # Deadline/cancel re-check at admission time (the _reap
+                # sweep's snapshot can lapse within the same step).
+                self._admission_reap(req)
                 continue
             batch.append((free.pop(0), req))
         if not batch:
@@ -1038,6 +1268,88 @@ class Engine:
             self.slot_req[s] = r
             r.status = "running"
             self.slot_pos[s] = len(r.prompt)
+            self.slot_prefill_done[s] = len(r.prompt)
+
+    # ---- token-budget admission (no prefill dispatch) ----------------------
+
+    def _admit_budget(self) -> None:
+        """Admission under the token-budget scheduler: NO prefill dispatch
+        here — an admitted request's prompt streams into the cache through
+        the mixed step's chunk rows (slot_prefill_done tracks progress), so
+        admitting a 4k-token prompt costs this step nothing.  Candidates
+        are taken in SLO priority order (TokenBudgetScheduler.queue_key)
+        instead of FIFO; pool pressure stops admission at the first
+        candidate that does not fit, so a smaller request never jumps a
+        starved larger one.  Paged prompts commit their whole page plan up
+        front; leading prefix-shared pages are reused VERBATIM —
+        slot_prefill_done starts past them, so a chunk row never rewrites a
+        shared page and the COW boundary stays exact even when the shared
+        prefix is not chunk- or block-aligned (the partial boundary block
+        was already COW-split by plan_prompt/commit_prompt)."""
+        free = [s for s in range(self.slots) if self.slot_req[s] is None]
+        if not free or not self.queue:
+            return
+        candidates = sorted(
+            self.queue,
+            key=lambda r: self.scheduler.queue_key(r, self.step_count),
+        )
+        for req in candidates:
+            if not free:
+                break
+            if req.max_new_tokens <= 0:
+                self.queue.remove(req)
+                self._finish_degenerate(req)
+                continue
+            if req.cancel_requested or self._past_deadline(req):
+                # Deadline/cancel re-check at admission time (the _reap
+                # sweep's snapshot can lapse within the same step).
+                self.queue.remove(req)
+                self._admission_reap(req)
+                continue
+            done = 0
+            if self.cache_mode == "paged":
+                nblocks, shared = self.alloc.plan_prompt(req.prompt)
+                # Share only pages whose content has actually LANDED:
+                # commit_prompt registers pages before any chunk writes
+                # them (chunked prefill is lazy), and a row prefilling
+                # from INSIDE a shared block sprays its window-pad writes
+                # (positions past its chunk, garbage K/V) across the
+                # owner's history.  Truncating the plan at the first
+                # unwritten page keeps this row's entire write range —
+                # real chunks AND pads — inside private pages: written
+                # shared pages are skipped outright (slot_prefill_done
+                # starts past them), unwritten ones are never shared.
+                lead = 0
+                while (lead in shared
+                       and shared[lead] in self._prompt_pages_written):
+                    lead += 1
+                shared = {j: p for j, p in shared.items() if j < lead}
+                if nblocks - len(shared) > self.alloc.available():
+                    break  # pool pressure: the head candidate waits
+                plan = self.alloc.commit_prompt(req.prompt, nblocks, shared)
+                assert plan is not None
+                s = free.pop(0)
+                self.slot_pages[s] = list(plan.pages)
+                self.alloc.claim_owner(plan.pages, s)
+                self.block_table[s, :] = paged_lib.SCRATCH_PAGE
+                self.block_table[s, : len(plan.pages)] = plan.pages
+                self.slot_ticket[s] = self._ticket
+                self._ticket += 1
+                self._tables_dirty = True
+                done = lead * self.block_size
+                # Pages this row's chunks will (re)write are not valid
+                # prefix content until those chunks land.
+                for pg, sh in zip(plan.pages, plan.shared):
+                    if not sh:
+                        self._prompt_pages_written.discard(pg)
+            else:
+                s = free.pop(0)
+            self.queue.remove(req)
+            self.slot_req[s] = req
+            req.status = "running"
+            self.slot_prefill_done[s] = done
+            self.slot_pos[s] = done
+            self.continuous["chunked_admissions"] += 1
 
     def _finish_slot(self, s: int, *, status: str = "ok",
                      error: str | None = None) -> None:
@@ -1054,6 +1366,7 @@ class Engine:
             self.lifecycle[status] = self.lifecycle.get(status, 0) + 1
         self.slot_req[s] = None
         self.slot_pos[s] = 0  # freed rows decode (discarded) at pos 0
+        self.slot_prefill_done[s] = 0
         if self.cache_mode == "paged":
             # Freed-on-finish: every page back to the pool (shared pages by
             # refcount), table row back to scratch.
@@ -1073,6 +1386,8 @@ class Engine:
             req.generated.append(t)
             self.slot_pos[s] += 1
             emitted += 1
+            if self.stream_cb is not None:
+                self.stream_cb(req, int(t))
             if (
                 (req.eos_id is not None and t == req.eos_id)
                 or len(req.generated) >= req.max_new_tokens
@@ -1136,15 +1451,18 @@ class Engine:
             self.caches = self._with_tables(self.caches)
             self._tables_dirty = False
 
-    def _plan_drafts(self, active: list[int]):
+    def _plan_drafts(self, active: list[int], k_max: int | None = None):
         """(L, {slot: draft}) for this step's verify window, or None to take
-        the plain one-token path (no headroom, or nothing to propose)."""
+        the plain one-token path (no headroom, or nothing to propose).
+        `k_max` caps drafts below draft_k (the token-budget mixed step
+        shares its budget between drafts and prefill chunks)."""
         # One shared window length L: every row's last verify write lands at
         # pos-1 + L-1, which must stay inside max_seq even for padded rows
         # (pads scatter real cache writes), so the most constrained slot caps
         # the batch.  Compiled verify shapes stay O(draft_k) distinct.
+        k = self.draft_k if k_max is None else min(self.draft_k, int(k_max))
         head = min(self.max_seq - int(self.slot_pos[s]) + 1 for s in active)
-        L = min(1 + self.draft_k, head)
+        L = min(1 + k, head)
         if L <= 1:
             return None
         drafts: dict[int, np.ndarray] = {}
@@ -1235,18 +1553,266 @@ class Engine:
                 a += 1
             commit = [int(t) for t in d[:a]] + [int(tgt[s, a])]
             req = self.slot_req[s]
-            req.draft_proposed += int(d.size)
-            req.draft_accepted += a
-            self.slot_proposed[s] += int(d.size)
-            self.slot_accepted[s] += a
-            st["slot_steps"] += 1
-            st["proposed"] += int(d.size)
-            st["accepted"] += a
             got = self._commit_tokens(s, commit)
+            # A finish condition inside the window (EOS among the accepted
+            # drafts, max_new_tokens, max_seq) truncates the commit.  The
+            # draft tail past the cut was scored but never influenced
+            # output — counting it inflated draft_proposed and skewed
+            # acceptance_rate low on EOS-heavy workloads.  Count only the
+            # drafts actually consumed: on truncation every emitted token
+            # IS an accepted draft (the bonus never lands), so proposed ==
+            # accepted == got for that row.
+            if got == len(commit):
+                scored, used = int(d.size), a
+            else:
+                scored = used = min(got, a)
+            req.draft_proposed += scored
+            req.draft_accepted += used
+            self.slot_proposed[s] += scored
+            self.slot_accepted[s] += used
+            st["slot_steps"] += 1
+            st["proposed"] += scored
+            st["accepted"] += used
             st["committed"] += got
             emitted += got
             if self.cache_mode == "paged" and self.slot_req[s] is not None:
                 self._truncate_slot_pages(s)
+        return emitted
+
+    # ---- token-budget mixed step (chunked prefill beside decode) -----------
+
+    def _mixed_step(self) -> int:
+        """ONE token-budget-bounded decode-phase dispatch for every active
+        slot: decode rows spend 1 token each (or their spec-verify window)
+        and prefill rows spend a chunk of their remaining prompt — a long
+        prompt admitted mid-decode streams into the cache beside the
+        decoding slots instead of pausing them (zero decode-stall steps by
+        construction; gated in benchmarks/check_regression.py).
+
+        The window generalizes the spec-verify machinery: row r holds
+        tokens for positions start_r .. start_r + L - 1, where start_r is
+        slot_pos - 1 (decode: the last committed token re-presented) or
+        prefill_done (prefill: the next chunk).  The masked-causal window
+        mask on top of the full committed history IS chunked-prefill
+        masking when the window holds prompt tokens.  Window pads write
+        garbage K/V strictly BEYOND every row's real content — masked until
+        a later real write lands first (the spec-rollback contract) — and
+        the shared width L is head-capped so no pad reaches max_seq, while
+        the paged table is widened to cover the window so no pad clamps
+        onto committed pages (_live_table_width).  A prefill row's final
+        chunk yields its first generated token in the same dispatch: the
+        logits at the chunk's last window index are the same computation
+        the phase-split path runs as its first decode, so output is
+        token-identical to sequential prefill-then-decode."""
+        active = [s for s in range(self.slots) if self.slot_req[s] is not None]
+        if not active:
+            return 0
+        cont = self.continuous
+        decode_rows = [
+            s for s in active
+            if self.slot_prefill_done[s] >= len(self.slot_req[s].prompt)
+        ]
+        prefill_rows = [s for s in active if s not in set(decode_rows)]
+
+        # Per-row window start; L is capped so start + L <= max_seq for
+        # EVERY row (pads scatter real cache writes).  Live decode rows
+        # always have slot_pos <= max_seq - 1 (the finish funnel retires
+        # them at max_seq) and prefill rows have done < plen <= max_seq,
+        # so head >= 1 and decode rows always fit their 1 real token.
+        start = {
+            s: (
+                max(int(self.slot_pos[s]) - 1, 0)
+                if s in set(decode_rows)
+                else int(self.slot_prefill_done[s])
+            )
+            for s in active
+        }
+        head = min(self.max_seq - start[s] for s in active)
+
+        # Spec drafts for decode rows, capped by the budget's spare share.
+        drafts: dict[int, np.ndarray] = {}
+        if self.spec_decode and decode_rows:
+            k_cap = spec_lib.draft_budget(
+                self.draft_k, len(decode_rows), self.token_budget
+            )
+            plan = (
+                self._plan_drafts(decode_rows, k_max=min(k_cap, head - 1))
+                if k_cap > 0 and head > 1
+                else None
+            )
+            if plan is not None:
+                drafts = {s: d for s, d in plan[1].items() if d.size}
+            if drafts and self.cache_mode == "paged":
+                # Never preempt a live request for pages only unverified
+                # drafts need (the _draft_pages_fit contract, per-row).
+                need = sum(
+                    max(
+                        0,
+                        (start[s] + int(drafts[s].size)) // self.block_size
+                        + 1 - len(self.slot_pages[s]),
+                    )
+                    for s in drafts
+                )
+                if need > self.alloc.available():
+                    self.spec_stats["pool_deferred"] += 1
+                    drafts = {}
+
+        # Budget split: decode rows first (their windows), prefill chunks
+        # take the rest — at least 1 token per prefill row.
+        decode_cost = sum(
+            1 + int(drafts.get(s, spec_lib._EMPTY).size) for s in decode_rows
+        )
+        chunks: dict[int, int] = {}
+        if prefill_rows:
+            remaining = {
+                s: len(self.slot_req[s].prompt) - int(self.slot_prefill_done[s])
+                for s in prefill_rows
+            }
+            order = sorted(
+                prefill_rows,
+                key=lambda s: (
+                    self.scheduler.rank(self.slot_req[s]),
+                    int(self.slot_ticket[s]) if self.cache_mode == "paged" else s,
+                ),
+            )
+            chunks = self.scheduler.split_chunks(decode_cost, remaining, order)
+            chunks = {s: min(c, head) for s, c in chunks.items()}
+
+        # Shared window width, bucketed to a power of two so compiled mixed
+        # shapes stay O(log budget) distinct; the head cap still rules
+        # (real content never exceeds head, so the min never truncates it).
+        width = 1
+        for s in decode_rows:
+            width = max(width, 1 + int(drafts.get(s, spec_lib._EMPTY).size))
+        for s in prefill_rows:
+            width = max(width, chunks[s])
+        L = min(1 << (width - 1).bit_length(), head)
+
+        if self.cache_mode == "paged":
+            ends = {}
+            for s in decode_rows:
+                ends[s] = start[s] + int(drafts.get(s, spec_lib._EMPTY).size)
+            for s in prefill_rows:
+                ends[s] = start[s] + chunks[s] - 1  # within the admitted plan
+            self._ensure_pages(ends)
+            if any(self.slot_req[s] is None for s in active):
+                # Pool growth preempted someone mid-plan: replan the whole
+                # window against the surviving slots rather than reason
+                # about a half-evicted layout.  Bounded by slot count.
+                return self._mixed_step()
+            self.peak_active = max(self.peak_active, len(active))
+            # Widen the table to the window (pad-write safety; see
+            # _live_table_width) and refresh if the width bucket moved.
+            wb = max((start[s] + L - 1) // self.block_size + 1 for s in active)
+            if wb != self._window_blocks:
+                self._window_blocks = wb
+                self._tables_dirty = True
+        self._refresh_tables()
+
+        k_cols = 1 + self.draft_k if self.spec_decode else 1
+        mat = np.zeros((self.slots, L), np.int32)
+        pos_vec = np.zeros(self.slots, np.int32)
+        idx = np.zeros((self.slots, k_cols), np.int32)
+        for s in decode_rows:
+            req = self.slot_req[s]
+            mat[s, 0] = (
+                req.generated[-1] if req.generated else int(req.prompt[-1])
+            )
+            d = drafts.get(s, spec_lib._EMPTY)
+            if d.size:
+                mat[s, 1 : 1 + d.size] = d
+            pos_vec[s] = start[s]
+            idx[s] = np.minimum(np.arange(k_cols), L - 1)
+        for s in prefill_rows:
+            req = self.slot_req[s]
+            done, c = int(self.slot_prefill_done[s]), chunks[s]
+            mat[s, :c] = np.asarray(req.prompt[done : done + c], np.int32)
+            pos_vec[s] = done
+            idx[s] = c - 1  # the final chunk's bonus logit; unused otherwise
+
+        self._mixed_m = self.slots * L
+        cont["mixed_steps"] += 1
+        cont["decode_tokens"] += decode_cost
+        cont["prefill_tokens"] += sum(chunks.values())
+        logits, self.caches = self._dispatch(
+            "mixed", "mixed_fn",
+            self.params, self.caches,
+            jnp.asarray(mat), jnp.asarray(pos_vec), jnp.asarray(idx),
+        )
+        bad = self._guard_slots(logits, active)
+        # tgt[s, j]: the greedy token after consuming mat[s, :idx[s, j]+1].
+        tgt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        st = self.spec_stats if (self.spec_decode and drafts) else None
+        if st is not None:
+            st["steps"] += 1
+        emitted = 0
+        decode_emitted = 0
+        for s in active:
+            if self.slot_req[s] is None:
+                continue
+            if s in bad:
+                self._finish_slot(
+                    s, status="error",
+                    error="non-finite logits (guard tripped, mixed)",
+                )
+                continue
+            req = self.slot_req[s]
+            if req.cancel_requested:
+                self._finish_slot(
+                    s, status="cancelled", error="cancelled mid-dispatch"
+                )
+                continue
+            if s in chunks:
+                # Prefill row: the chunk's K/V landed in cache this dispatch.
+                done = int(self.slot_prefill_done[s]) + chunks[s]
+                self.slot_prefill_done[s] = done
+                self.slot_pos[s] = done
+                if self.cache_mode == "paged":
+                    # Fully covered prompt blocks are now valid prefix
+                    # content for later prefix-sharing admissions.
+                    for b in range(done // self.block_size):
+                        self._prompt_pages_written.add(self.slot_pages[s][b])
+                if done >= len(req.prompt):
+                    # Final chunk: its last window index scored position
+                    # plen - 1 — the first decode.  Committing it here keeps
+                    # prefill completion and first token in one dispatch.
+                    cont["completed_prefills"] += 1
+                    got = self._commit_tokens(s, [int(tgt[s, 0])])
+                    emitted += got
+                continue
+            # Decode row: greedy-consistent draft prefix + bonus token
+            # (plain decode is the d.size == 0 degenerate: bonus only).
+            d = drafts.get(s, spec_lib._EMPTY)
+            a = 0
+            while a < d.size and int(d[a]) == int(tgt[s, a]):
+                a += 1
+            commit = [int(t) for t in d[:a]] + [int(tgt[s, a])]
+            got = self._commit_tokens(s, commit)
+            emitted += got
+            decode_emitted += got
+            if st is not None:
+                # Same truncation-aware accounting as _spec_step.
+                if got == len(commit):
+                    scored, used = int(d.size), a
+                else:
+                    scored = used = min(got, a)
+                req.draft_proposed += scored
+                req.draft_accepted += used
+                self.slot_proposed[s] += scored
+                self.slot_accepted[s] += used
+                st["slot_steps"] += 1
+                st["proposed"] += scored
+                st["accepted"] += used
+                st["committed"] += got
+            if self.cache_mode == "paged" and self.slot_req[s] is not None:
+                self._truncate_slot_pages(s)
+        if decode_rows and decode_emitted == 0 and any(
+            self.slot_req[s] is not None for s in decode_rows
+        ):
+            # A live decode row emitted nothing this step — the stall the
+            # token budget exists to prevent (0 by construction; the bench
+            # gate pins it).
+            cont["decode_stall_steps"] += 1
         return emitted
 
     # ---- the engine loop ---------------------------------------------------
@@ -1269,6 +1835,11 @@ class Engine:
             self.hooks.on_step_begin(self)
         self._reap_lifecycle()
         self._admit()
+        if self.scheduler is not None:
+            # Token-budget continuous batching: one mixed dispatch serves
+            # decode AND chunked prefill; the phase-split paths below never
+            # run for this engine.
+            return self._mixed_step()
         active = [s for s in range(self.slots) if self.slot_req[s] is not None]
         if not active:
             return 0

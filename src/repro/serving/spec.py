@@ -60,3 +60,23 @@ def propose(
             start = int(full[-1] if full.size else hits[np.argmax(room)]) + n
             return np.ascontiguousarray(ctx[start : start + k], dtype=np.int32)
     return _EMPTY
+
+
+def draft_budget(draft_k: int, decode_rows: int, token_budget: int | None) -> int:
+    """Per-slot draft cap under a token budget (the token-budget mixed step,
+    serving/engine.py): spec-verify windows spend the SAME budget as every
+    other token in the dispatch, so with `decode_rows` slots decoding, each
+    may draft at most
+
+        floor((budget - decode_rows) / decode_rows)
+
+    tokens — the decode rows' own 1-token-per-slot floor is reserved first
+    (decode never stalls for drafts), and what remains splits evenly.  The
+    result is clamped to [0, draft_k]; with no budget (phase-split engines)
+    the full draft_k stands.  Chunked-prefill rows then take what the drafts
+    left over, so speculation and prefill compete for one pool instead of
+    speculation silently inflating the dispatch past the budget."""
+    if token_budget is None or decode_rows <= 0:
+        return max(0, int(draft_k))
+    spare = (int(token_budget) - decode_rows) // decode_rows
+    return max(0, min(int(draft_k), spare))

@@ -90,10 +90,10 @@ def _drive(eng, sched=None, budget=300):
     return steps
 
 
-def _conformance(schedule_path, *, spec=False, cache_mode="paged"):
+def _conformance(schedule_path, *, spec=False, cache_mode="paged", **kw):
     prompts = _prompts(repeat=spec)
     mk = dict(prompts=prompts, cache_mode=cache_mode,
-              spec_decode=spec, draft_k=3)
+              spec_decode=spec, draft_k=3, **kw)
     gold = {r.uid: list(r.generated)
             for r in _drive_to_finish(_engine(**mk))}
     sched = faults_lib.FaultSchedule.from_json(schedule_path)
@@ -156,6 +156,29 @@ def test_chaos_conformance_dense_spec_decode():
     path = os.path.join(SCHEDULE_DIR, "spec_cancel.json")
     eng, _ = _conformance(path, spec=True, cache_mode="dense")
     assert eng.spec_decode
+
+
+# The same committed schedules replayed through the token-budget mixed
+# scheduler (serving/engine.py _mixed_step): the conformance contract —
+# terminal statuses, survivor token identity, zero leaked pages, quarantine
+# audit trail — must hold when decode and chunked prefill share one
+# dispatch.  A kernel_fault during a mixed step quarantines/degrades
+# WITHOUT losing the co-scheduled prefill chunks' progress (survivors stay
+# token-identical, which they could not if a chunk were dropped or
+# double-applied across the retry).
+@pytest.mark.parametrize(
+    "path", SCHEDULES, ids=[os.path.basename(p) for p in SCHEDULES]
+)
+def test_chaos_conformance_token_budget(path):
+    eng, _ = _conformance(path, token_budget=24)
+    assert eng.scheduler is not None
+    assert eng.stats["continuous"]["mixed_steps"] > 0
+
+
+def test_chaos_conformance_token_budget_spec_decode():
+    path = os.path.join(SCHEDULE_DIR, "spec_cancel.json")
+    eng, _ = _conformance(path, spec=True, token_budget=24)
+    assert eng.spec_decode and eng.scheduler is not None
 
 
 def test_schedule_json_roundtrip(tmp_path):

@@ -43,6 +43,10 @@ def test_verify_bucket_routes_to_mmt4d_not_gemv(tmp_path):
         assert registry.default_backend(quant, Phase.DECODE, "m8") == "fused"
         assert registry.default_backend(quant, Phase.DECODE, "m32") == "pallas"
         assert registry.default_backend(quant, Phase.DECODE, "m64") == "pallas"
+        # The token-budget mixed step packs slots x window rows — "big" must
+        # stay on the GEMM side of the monotonic policy, not fall through to
+        # the fused GEMV like it once did.
+        assert registry.default_backend(quant, Phase.DECODE, "big") == "pallas"
     # A target that measured the fused GEMV faster at a multi-row bucket
     # overrides the policy through its tuned entry (tpu-v5e m64).
     m64 = registry.select(quant="none", phase=Phase.DECODE, m=48)
