@@ -65,6 +65,13 @@ CHECKS = [
     ("BENCH_decode.json", "continuous.decode_stall_steps", "max_abs", 0.0),
     ("BENCH_decode.json", "continuous.token_identical", "min_abs", 1.0),
     ("BENCH_decode.json", "continuous.pages_leaked", "max_abs", 0.0),
+    # -- tensor parallelism: the TP acceptance bar.  mesh=2/4 decode must be
+    #    token-identical to mesh=1 (measured on 4 emulated CPU devices), and
+    #    head-parallel KV must scale paged capacity >= 1.8x at 2 shards under
+    #    a fixed per-shard HBM budget (deterministic capacity model) --
+    ("BENCH_decode.json", "tp.token_identical", "min_abs", 1.0),
+    ("BENCH_decode.json", "tp.kv_capacity_scaling_2", "min_abs", 1.8),
+    ("BENCH_decode.json", "tp.kv_capacity_scaling_4", "baseline_frac", 0.99),
     # -- wall clock, wide band (catches artificial slowdowns, not runner skew) --
     ("BENCH_decode.json", "engine.vectorized.tok_s", "baseline_frac", 0.2),
     # -- paged KV cache: deterministic scheduler outcomes (seeded stream) --

@@ -754,6 +754,166 @@ def continuous_bench(
     ]
 
 
+# ---- tensor parallelism: sharded serving over a device mesh ----------------
+
+
+_TP_BENCH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json, sys, time
+import jax
+import numpy as np
+from repro.configs import registry
+from repro.core.packed import EncodingConfig
+from repro.models import transformer as T
+from repro.serving import engine as engine_lib
+from repro.serving.config import EngineConfig
+
+quick = sys.argv[1] == "quick"
+# num_kv_heads=4 so the KV-head axis divides at 2 and 4 shards (the stock
+# reduced config's single KV head would replicate — correct, no capacity win).
+cfg = registry.get_reduced("qwen2-1.5b", num_kv_heads=4)
+enc = EncodingConfig(enabled=True, backend="xla")
+params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
+rng = np.random.RandomState(0)
+prompts = [rng.randint(1, cfg.vocab_size, n).astype(np.int32)
+           for n in (5, 8, 11, 14)]
+max_new = 6 if quick else 12
+
+def run(shards):
+    eng = engine_lib.Engine(
+        params, cfg, enc,
+        config=EngineConfig(slots=len(prompts), max_seq=64,
+                            cache_mode="paged", block_size=8,
+                            mesh_shape=(shards,)))
+    for i, p in enumerate(prompts):
+        eng.submit(engine_lib.Request(uid=i, prompt=p, max_new_tokens=max_new))
+    eng.step()  # admit + first decode: compile outside the timed region
+    t0 = time.perf_counter()
+    emitted = 0
+    while eng.queue or any(r is not None for r in eng.slot_req):
+        emitted += eng.step()
+    jax.block_until_ready(jax.tree.leaves(eng.caches)[0])
+    dt = time.perf_counter() - t0
+    eng.audit()
+    return {r.uid: list(r.generated) for r in eng.finished}, emitted / dt
+
+out = {}
+base = None
+for shards in (1, 2, 4):
+    gens, tok_s = run(shards)
+    if base is None:
+        base = gens
+    out[str(shards)] = {"tok_s": tok_s,
+                        "token_identical": 1.0 if gens == base else 0.0}
+print("TP_BENCH_JSON " + json.dumps(out))
+"""
+
+
+def tp_bench(
+    *,
+    quick: bool = False,
+    out_json: str = "BENCH_decode.json",
+):
+    """Tensor-parallel serving (docs/PERF.md §Tensor-parallel capacity math):
+
+      token_identical     — mesh=2/4 decode emits exactly the mesh=1 stream
+                            (4 emulated CPU devices in a subprocess; the
+                            same CI-gated identity tests/test_tp_mesh.py
+                            pins).  Gated at 1.0.
+      kv_capacity_scaling — analytic paged request capacity at a FIXED
+                            per-shard HBM budget, relative to 1 shard
+                            (encoding.tp_kv_capacity_requests): head-parallel
+                            KV shrinks each shard's bytes/token by the shard
+                            count, so capacity scales with shards when the
+                            kv heads divide.  Gated >= 1.8 at 2 shards.
+      tok_s               — emulated-CPU wall clock per shard count.
+                            Directional only (host devices share one core);
+                            reported, not gated.
+
+    Merges a "tp" section into BENCH_decode.json and returns CSV rows."""
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else [])
+    )
+    env.pop("XLA_FLAGS", None)  # the child pins its own device count
+    r = subprocess.run(
+        [sys.executable, "-c", _TP_BENCH_SCRIPT, "quick" if quick else "full"],
+        env=env, capture_output=True, text=True, timeout=900,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(f"tp bench subprocess failed:\n{r.stderr[-4000:]}")
+    line = next(
+        l for l in r.stdout.splitlines() if l.startswith("TP_BENCH_JSON ")
+    )
+    measured = json.loads(line[len("TP_BENCH_JSON "):])
+
+    # Analytic capacity at one fixed per-shard budget (full-size llama3.2-1b
+    # KV geometry: 8 kv heads x 64 head_dim x 16 layers, bf16).
+    kvh, hd, layers, itemsize = 8, 64, 16, 2
+    max_seq, block_size, mean_tokens = 4096, 16, 512
+    budget = encoding.dense_kv_hbm_bytes(
+        4, max_seq, layers, kvh, hd, itemsize=itemsize
+    )
+    capacity = {
+        str(s): encoding.tp_kv_capacity_requests(
+            budget, shards=s, max_seq=max_seq, mean_tokens=mean_tokens,
+            block_size=block_size, num_layers=layers, num_kv_heads=kvh,
+            head_dim=hd, itemsize=itemsize,
+        )
+        for s in (1, 2, 4)
+    }
+    token_identical = min(
+        measured[s]["token_identical"] for s in ("1", "2", "4")
+    )
+    tp_stats = {
+        "mode": "quick" if quick else "full",
+        "emulation": "--xla_force_host_platform_device_count=4",
+        "kv_geometry": {
+            "num_kv_heads": kvh, "head_dim": hd, "num_layers": layers,
+            "itemsize": itemsize, "max_seq": max_seq,
+            "block_size": block_size, "mean_tokens": mean_tokens,
+        },
+        "hbm_budget_per_shard": int(budget),
+        "shards": {
+            s: {
+                "tok_s": measured[s]["tok_s"],
+                "token_identical": measured[s]["token_identical"],
+                "capacity_requests": capacity[s]["paged"],
+                "bytes_per_token_per_shard":
+                    capacity[s]["bytes_per_token_per_shard"],
+            }
+            for s in ("1", "2", "4")
+        },
+        "token_identical": token_identical,
+        "kv_capacity_scaling_2": capacity["2"]["scaling_vs_1"],
+        "kv_capacity_scaling_4": capacity["4"]["scaling_vs_1"],
+    }
+    try:
+        with open(out_json) as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {}
+    result["tp"] = tp_stats
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    return [
+        ("tp/token_identical", token_identical),
+        ("tp/kv_capacity_scaling_2", tp_stats["kv_capacity_scaling_2"]),
+        ("tp/kv_capacity_scaling_4", tp_stats["kv_capacity_scaling_4"]),
+        ("tp/capacity_requests_1", capacity["1"]["paged"]),
+        ("tp/capacity_requests_2", capacity["2"]["paged"]),
+        ("tp/capacity_requests_4", capacity["4"]["paged"]),
+        ("tp/tok_s_1", measured["1"]["tok_s"]),
+        ("tp/tok_s_2", measured["2"]["tok_s"]),
+        ("tp/tok_s_4", measured["4"]["tok_s"]),
+    ]
+
+
 # ---- paged KV cache: pool utilization + capacity vs dense ------------------
 
 
@@ -900,6 +1060,8 @@ def main(*, quick: bool = False):
     for name, val in chaos_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in continuous_bench(quick=quick):
+        print(f"{name},{val:.4f},see-BENCH_decode.json")
+    for name, val in tp_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in paged_cache_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_paged.json")

@@ -333,6 +333,57 @@ def kv_capacity_requests(
     }
 
 
+def tp_kv_capacity_requests(
+    hbm_budget_per_shard: int,
+    *,
+    shards: int,
+    max_seq: int,
+    mean_tokens: int,
+    block_size: int,
+    num_layers: int,
+    num_kv_heads: int,
+    head_dim: int,
+    itemsize: int = 2,
+) -> dict[str, float]:
+    """`kv_capacity_requests` under head-parallel tensor parallelism
+    (docs/PERF.md §Tensor-parallel capacity math).
+
+    Each of `shards` devices holds the SAME per-shard HBM budget but only
+    its own kv-head slice of every page (num_kv_heads / shards heads), so a
+    token's per-shard KV footprint shrinks by the shard count and the pool
+    a fixed per-device budget sustains grows by it: capacity scales with
+    SHARDS, not just pool pages.  When the heads do NOT divide, the
+    sharding sanitizer replicates the KV cache instead (correctness
+    preserved, capacity win forfeited) — reported honestly as scaling 1.0.
+
+    Returns the dense/paged request capacities at this shard count plus
+    `scaling_vs_1` (paged capacity relative to the same budget at shards=1
+    — exactly `shards` for dividing heads; the bench gate pins >= 1.8 at
+    2 shards)."""
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    divides = num_kv_heads % shards == 0
+    local_heads = num_kv_heads // shards if divides else num_kv_heads
+    base = kv_capacity_requests(
+        hbm_budget_per_shard, max_seq=max_seq, mean_tokens=mean_tokens,
+        block_size=block_size, num_layers=num_layers,
+        num_kv_heads=num_kv_heads, head_dim=head_dim, itemsize=itemsize,
+    )
+    local = kv_capacity_requests(
+        hbm_budget_per_shard, max_seq=max_seq, mean_tokens=mean_tokens,
+        block_size=block_size, num_layers=num_layers,
+        num_kv_heads=local_heads, head_dim=head_dim, itemsize=itemsize,
+    )
+    return {
+        "dense": local["dense"],
+        "paged": local["paged"],
+        "bytes_per_token_per_shard": local["bytes_per_token"],
+        "blocks_per_request": local["blocks_per_request"],
+        "kv_heads_divide": float(divides),
+        "scaling_vs_1": local["paged"] / max(1, base["paged"]),
+    }
+
+
 def _round_up(x: int, mult: int) -> int:
     return mult * math.ceil(x / mult) if mult > 0 else x
 

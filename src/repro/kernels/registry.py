@@ -201,17 +201,48 @@ def clear_cache() -> None:
 # requested -> tuned -> policy -> fallback ladder to skip.  Populated by the
 # serving engine when a dispatch raises or fails the finite-output check
 # (engine._quarantine_kernel); consulted by select()/select_attn() below.
+#
+# Tensor-parallel serving makes the table SHARD-AWARE: a fault attributed to
+# one shard (a single bad device/core) demotes only that shard's entry —
+# stored under "key@shardN" — never the key globally.  Because the serving
+# dispatch is one SPMD program executed by every shard, resolution with
+# shard=None (what select()/select_attn() do at trace time) takes the MAX
+# level over the base key and all its shard entries: the shared program must
+# avoid a kernel any shard cannot run.  Per-shard observability
+# (Engine.stats["degraded"]/["attn_backend"]) resolves with an explicit
+# shard, which consults only that shard's entry (plus any global one) — so a
+# shard-0 query stays clean after a shard-1 demotion.
 
 _quarantine: dict[str, dict] = {}
 
+_SHARD_SEP = "@shard"
 
-def quarantine_level(key: str) -> int:
+
+def _shard_key(key: str, shard: int) -> str:
+    return f"{key}{_SHARD_SEP}{int(shard)}"
+
+
+def quarantine_level(key: str, shard: int | None = None) -> int:
+    """Demotion level for `key`.  shard=None: the EFFECTIVE level the single
+    SPMD dispatch must honour (max over global + every shard).  shard=k: the
+    level as seen from shard k only (global + that shard's entry)."""
     entry = _quarantine.get(key)
-    return entry["level"] if entry else 0
+    lvl = entry["level"] if entry else 0
+    if shard is None:
+        prefix = key + _SHARD_SEP
+        for k, e in _quarantine.items():
+            if k.startswith(prefix):
+                lvl = max(lvl, e["level"])
+    else:
+        e = _quarantine.get(_shard_key(key, shard))
+        if e is not None:
+            lvl = max(lvl, e["level"])
+    return lvl
 
 
 def quarantine_snapshot() -> dict[str, dict]:
-    """{key: {"level", "from", "to", "reason"}} for every demoted key."""
+    """{key: {"level", "from", "to", "reason"[, "shard"]}} for every demoted
+    key; shard-local demotions appear under their "key@shardN" entry."""
     return {k: dict(v) for k, v in _quarantine.items()}
 
 
@@ -221,11 +252,11 @@ def clear_quarantine() -> None:
 
 
 def _apply_quarantine(
-    key: str, ladder: list[tuple[str, str]]
+    key: str, ladder: list[tuple[str, str]], shard: int | None = None
 ) -> tuple[str, str]:
     """Pick the ladder rung the key's demotion level points at.  Levels past
     the bottom clamp to the last rung (the fallback can't be demoted)."""
-    lvl = quarantine_level(key)
+    lvl = quarantine_level(key, shard)
     backend, source = ladder[min(lvl, len(ladder) - 1)]
     if lvl > 0:
         source = f"quarantined:{source}"
@@ -233,11 +264,12 @@ def _apply_quarantine(
 
 
 def _demote_ladder(key: str, ladder: list[tuple[str, str]], failing: str,
-                   reason: str) -> dict:
-    """Record a demotion for `key`: advance the level until the resolved
-    backend differs from `failing` (or the bottom rung is reached).  Returns
-    the quarantine record ({"level", "from", "to", "reason"})."""
-    lvl = quarantine_level(key)
+                   reason: str, shard: int | None = None) -> dict:
+    """Record a demotion for `key` (shard-local when `shard` is given):
+    advance the level until the resolved backend differs from `failing` (or
+    the bottom rung is reached).  Returns the quarantine record
+    ({"level", "from", "to", "reason"[, "shard"]})."""
+    lvl = quarantine_level(key, shard)
     start = min(lvl, len(ladder) - 1)
     new = start
     while new < len(ladder) - 1:
@@ -250,7 +282,9 @@ def _demote_ladder(key: str, ladder: list[tuple[str, str]], failing: str,
         "to": ladder[new][0],
         "reason": reason,
     }
-    _quarantine[key] = record
+    if shard is not None:
+        record["shard"] = int(shard)
+    _quarantine[key if shard is None else _shard_key(key, shard)] = record
     return record
 
 
@@ -304,12 +338,15 @@ def select(
     requested: str | None = None,
     blocks: tuple[int, int, int] | None = None,
     table_path: str | None = None,
+    shard: int | None = None,
 ) -> KernelChoice:
     """Resolve one dispatch.  `requested` is the caller's backend= argument:
     "auto"/None defer to the registry; anything else is honoured verbatim
     (still picking up tuned blocks when the caller passed none) — unless the
     key is quarantined, which outranks even an explicit request (a pinned
-    kernel that failed the finite check must not keep serving)."""
+    kernel that failed the finite check must not keep serving).  `shard`
+    scopes the quarantine lookup: None = the effective (SPMD) level, k =
+    shard k's own view (per-shard observability)."""
     key = dispatch_key(quant, phase, m, getattr(target, "name", str(target)))
     entry = _tuned_entry(key, table_path)
     tuned_blocks = None
@@ -323,9 +360,11 @@ def select(
         quant, phase, m_bucket(m), getattr(target, "name", str(target)),
         requested, table_path,
     )
-    backend, source = _apply_quarantine(key, ladder)
+    backend, source = _apply_quarantine(key, ladder, shard)
     if source == "fallback":
-        resolved_blocks = None if quarantine_level(key) == 0 else resolved_blocks
+        resolved_blocks = (
+            None if quarantine_level(key, shard) == 0 else resolved_blocks
+        )
     return KernelChoice(backend, resolved_blocks, source)
 
 
@@ -334,18 +373,20 @@ def resolve_key(
     *,
     requested: str | None = None,
     table_path: str | None = None,
+    shard: int | None = None,
 ) -> KernelChoice:
     """Resolve a dispatch key string directly (either op class) — what
     select()/select_attn() would return for it, quarantine included.  The
     serving engine uses this to learn which backend is CURRENTLY serving a
-    key before demoting it."""
+    key before demoting it, and (with `shard`) to report per-shard
+    resolution in stats."""
     op, phase_val, bucket, target_name = key.split("|", 3)
     phase = Phase(phase_val)
     if op == ATTN_OP:
         ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
     else:
         ladder = _matmul_ladder(op, phase, bucket, target_name, requested, table_path)
-    backend, source = _apply_quarantine(key, ladder)
+    backend, source = _apply_quarantine(key, ladder, shard)
     return KernelChoice(backend, None, source)
 
 
@@ -356,19 +397,23 @@ def demote(
     reason: str = "",
     requested: str | None = None,
     table_path: str | None = None,
+    shard: int | None = None,
 ) -> dict:
     """Quarantine `key` (either op class — the key string carries its class):
     advance its demotion level past every rung that would re-resolve to the
-    `failing` backend.  Idempotent per rung: demoting an already-demoted key
-    moves it further down; the bottom rung clamps.  Returns the quarantine
-    record the engine surfaces in stats["degraded"]."""
+    `failing` backend.  With `shard`, the demotion is SHARD-LOCAL (stored
+    under "key@shardN"): other shards' views stay clean, though the shared
+    SPMD dispatch honours the max level across shards.  Idempotent per rung:
+    demoting an already-demoted key moves it further down; the bottom rung
+    clamps.  Returns the quarantine record the engine surfaces in
+    stats["degraded"]."""
     op, phase_val, bucket, target_name = key.split("|", 3)
     phase = Phase(phase_val)
     if op == ATTN_OP:
         ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
     else:
         ladder = _matmul_ladder(op, phase, bucket, target_name, requested, table_path)
-    return _demote_ladder(key, ladder, failing, reason)
+    return _demote_ladder(key, ladder, failing, reason, shard)
 
 
 # ---- the attention op class -------------------------------------------------
@@ -456,12 +501,14 @@ def select_attn(
     requested: str | None = None,
     blocks: tuple[int, ...] | None = None,
     table_path: str | None = None,
+    shard: int | None = None,
 ) -> KernelChoice:
     """Resolve one attention dispatch — the second op class, mirroring
     select(): `requested` is the caller's attn_backend (EncodingConfig /
     serve_llama --attn-backend); "auto"/None defer to tuned table -> static
     policy -> "xla" fallback on unknown targets.  A quarantined key outranks
-    everything, including an explicit request."""
+    everything, including an explicit request; `shard` scopes the lookup as
+    in select()."""
     target_name = getattr(target, "name", str(target))
     key = attn_dispatch_key(phase, s, target_name)
     entry = _tuned_entry(key, table_path)
@@ -469,7 +516,7 @@ def select_attn(
 
     bucket = s_bucket(s) if isinstance(phase, Phase) else ""
     ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
-    backend, source = _apply_quarantine(key, ladder)
-    if source == "fallback" and quarantine_level(key) == 0:
+    backend, source = _apply_quarantine(key, ladder, shard)
+    if source == "fallback" and quarantine_level(key, shard) == 0:
         resolved_blocks = None
     return KernelChoice(backend, resolved_blocks, source)

@@ -21,6 +21,7 @@ from repro.configs import registry
 from repro.core.packed import EncodingConfig
 from repro.models import transformer as T
 from repro.serving import engine as engine_lib
+from repro.serving.config import EngineConfig
 
 
 def main():
@@ -45,10 +46,16 @@ def main():
                     choices=sorted(engine_lib.SLO_CLASSES),
                     help="SLO class stamped on every submitted request "
                          "(admission priority under --token-budget)")
+    ap.add_argument("--mesh-shape", default="1",
+                    help='serving mesh shape: "2" = 2-way tensor parallel, '
+                         '"2x4" = 2 data replicas x 4-way TP; the device '
+                         "count must cover the product "
+                         "(launch/mesh.build_serving_mesh)")
     ap.add_argument("--stream", action="store_true",
                     help="print tokens as they are committed (stream_cb)")
     args = ap.parse_args()
 
+    config = EngineConfig.from_args(args)
     cfg = registry.get_reduced(args.arch)
     enc = EncodingConfig(enabled=True, backend=args.backend, interpret=True)
     params = T.model_init(jax.random.PRNGKey(args.seed), cfg, enc)
@@ -58,11 +65,15 @@ def main():
               f"({len(req.generated)}/{req.max_new_tokens})")
 
     eng = engine_lib.Engine(
-        params, cfg, enc, slots=args.slots, max_seq=args.max_seq,
-        cache_mode=args.cache_mode, block_size=args.block_size,
-        pool_pages=args.pool_pages, token_budget=args.token_budget,
+        params, cfg, enc, config=config,
         stream_cb=stream_cb if args.stream else None,
     )
+    if eng.config.downgrades or eng.enc_downgrades:
+        print(f"[serve] config downgrades: "
+              f"{list(eng.config.downgrades) + list(eng.enc_downgrades)}")
+    if eng.tp_shards > 1:
+        print(f"[serve] tensor parallel: {eng.tp_shards} shards "
+              f"(mesh {'x'.join(map(str, eng.config.mesh_shape))})")
 
     rng = np.random.RandomState(args.seed)
     t0 = time.time()

@@ -163,6 +163,37 @@ def cache_shardings(caches, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(one, caches)
 
 
+def serving_cache_shardings(caches, mesh: Mesh):
+    """Serving (tensor-parallel) KV-cache shardings: KV HEADS -> model.
+
+    The training-time `cache_shardings` shards the sequence axis (decode
+    SP); the serving engine instead runs head-parallel attention — each
+    shard owns the K/V slice of its own kv-head group, matching the
+    column-parallel wk/wv projections, so attention needs NO collective
+    until the row-parallel wo matmul's psum.  Covers both cache layouts:
+
+      dense  k/v: (G?, B,         S,     KV, hd)  -> heads (axis -2) on model
+      paged  k/v: (G?, num_pages, block, KV, hd)  -> heads (axis -2) on model
+      table     : (..., nb) block tables          -> replicated (host-mirrored)
+
+    `sanitize` drops the axis when kv_heads doesn't divide the shard count
+    (e.g. the reduced test configs' kv=1 under tp=2) — the cache replicates
+    and GSPMD still produces identical tokens, just without the capacity
+    win (docs/PERF.md §Tensor-parallel capacity)."""
+
+    def one(path, leaf):
+        names = _path_names(path)
+        leafname = names[-1] if names else ""
+        nd = leaf.ndim
+        if leafname in ("k", "v", "cross_k", "cross_v") and nd >= 4:
+            spec = P(*([None] * (nd - 2)), "model", None)
+        else:
+            spec = P(*([None] * nd))
+        return NamedSharding(mesh, sanitize(spec, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, caches)
+
+
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
 

@@ -71,11 +71,14 @@ import numpy as np
 from repro.core.encoding import Phase
 from repro.core.packed import EncodingConfig
 from repro.kernels import registry as registry_lib
+from repro.launch import mesh as mesh_lib
 from repro.models import transformer as T
+from repro.parallel import sharding as sharding_lib
 from repro.runtime import watchdog as watchdog_lib
 from repro.serving import faults as faults_lib
 from repro.serving import paged as paged_lib
 from repro.serving import spec as spec_lib
+from repro.serving.config import EngineConfig
 
 
 def make_prefill_step(cfg, enc: EncodingConfig) -> Callable:
@@ -250,7 +253,10 @@ def _batch_axis(path) -> int:
 
 def slot_gather(caches, slots_sel: list[int]):
     """Batch rows `slots_sel` of every cache leaf, as one gather per leaf."""
-    idx = jnp.asarray(slots_sel, jnp.int32)
+    # Host-side index build (np, not jnp): these gathers run eagerly on
+    # possibly-sharded cache leaves, and a committed device index array would
+    # pin the op to the default device and clash with NamedSharding inputs.
+    idx = np.asarray(slots_sel, np.int32)
 
     def one(path, c):
         return jnp.take(c, idx, axis=_batch_axis(path))
@@ -266,8 +272,8 @@ def slot_merge(caches, part, slots_sel: list[int], src_idx: list[int] | None = N
     """Write batch rows `src_idx` (default: same as slots_sel) of `part` into
     rows `slots_sel` of `caches` — one gather + one scatter per leaf (the
     per-slot .at[].set loop scaled O(slots) dispatches per leaf)."""
-    src = jnp.asarray(src_idx if src_idx is not None else slots_sel, jnp.int32)
-    dst = jnp.asarray(slots_sel, jnp.int32)
+    src = np.asarray(src_idx if src_idx is not None else slots_sel, np.int32)
+    dst = np.asarray(slots_sel, np.int32)
 
     def one(path, full, p):
         ax = _batch_axis(path)
@@ -496,33 +502,68 @@ class Engine:
         params,
         cfg,
         enc: EncodingConfig,
+        config: EngineConfig | None = None,
         *,
-        slots: int = 4,
-        max_seq: int = 256,
-        decode_mode: str = "vectorized",
-        batch_prefill: bool = True,
-        cache_mode: str = "paged",
-        block_size: int = 16,
-        pool_pages: int | None = None,
-        sample: str = "greedy",
-        seed: int = 0,
-        spec_decode: bool = False,
-        draft_k: int = 4,
         drafter: Callable | None = None,
-        max_queue: int | None = None,
         clock: Callable[[], float] | None = None,
         fault_hooks=None,
-        logits_guard: bool = True,
-        token_budget: int | None = None,
-        slo_aging_steps: int = 64,
         stream_cb: Callable[[Request, int], None] | None = None,
+        **kwargs,
     ):
-        assert decode_mode in ("vectorized", "grouped"), decode_mode
-        assert cache_mode in ("paged", "dense"), cache_mode
-        assert sample in SAMPLE_MODES, sample
-        self.params, self.cfg, self.enc = params, cfg, enc
-        self.slots = slots
-        self.max_seq = max_seq
+        # ---- configuration (serving/config.py) -----------------------------
+        # The engine's knobs live in one frozen, validated EngineConfig.
+        # `Engine(params, cfg, enc, slots=8, ...)` remains supported as a
+        # deprecation shim — the legacy kwargs are folded into
+        # EngineConfig(**kwargs) — but config= is the first-class path.
+        # Cross-field auto-downgrades (paged->dense, spec-off-under-sampling,
+        # grouped decode for recurrent families) happen in config.resolve(),
+        # not here; the applied rules are surfaced in stats["downgrades"].
+        if config is None:
+            config = EngineConfig(**kwargs)
+        elif kwargs:
+            raise TypeError(
+                "pass either config=EngineConfig(...) or the legacy engine "
+                f"kwargs, not both (got extra kwargs: {sorted(kwargs)})"
+            )
+        config = config.resolve(cfg)
+        self.config = config
+        self.cfg, self.enc = cfg, enc
+        self.slots = config.slots
+        self.max_seq = config.max_seq
+        # ---- tensor parallelism (docs/PERF.md §Tensor-parallel capacity) ---
+        # mesh_shape=(N,) with N > 1 shards the serving step across a device
+        # mesh: weight streams column/row-parallel (parallel/sharding.py),
+        # KV caches head-parallel (serving_cache_shardings), dispatch still
+        # ONE jitted SPMD program per step — GSPMD inserts the single psum
+        # per layer at the row-parallel wo/w_down matmuls.  Pallas custom
+        # calls are not GSPMD-partitionable, so both op classes are routed
+        # to the partitionable XLA paths under tp > 1 (recorded below).
+        self.tp_shards = config.tp_shards
+        self.mesh = None
+        enc_downgrades: list[str] = []
+        if config.mesh_devices > 1:
+            self.mesh = mesh_lib.build_serving_mesh(
+                config.mesh_shape, tp_axis=config.tp_axis
+            )
+        if self.tp_shards > 1:
+            repl = {}
+            if enc.backend not in ("xla", "reference"):
+                repl["backend"] = "xla"
+                enc_downgrades.append(f"backend:xla(tp,was={enc.backend})")
+            if getattr(enc, "attn_backend", "xla") != "xla":
+                repl["attn_backend"] = "xla"
+                enc_downgrades.append(
+                    f"attn_backend:xla(tp,was={enc.attn_backend})"
+                )
+            if repl:
+                self.enc = enc = dataclasses.replace(enc, **repl)
+        self.enc_downgrades = tuple(enc_downgrades)
+        self.params = params
+        if self.mesh is not None:
+            self.params = jax.device_put(
+                params,
+                sharding_lib.params_shardings(params, self.mesh, fsdp=False),
+            )
         # ---- lifecycle / robustness (docs/ROBUSTNESS.md) -------------------
         # max_queue: admission-queue bound — submit() returns Rejected
         #   ("queue_full") past it instead of growing without bound.
@@ -534,10 +575,10 @@ class Engine:
         #   injection points, all no-ops when None.
         # logits_guard: non-finite check on committed logits; quarantines the
         #   offending slot only (measured overhead in docs/ROBUSTNESS.md).
-        self.max_queue = max_queue
+        self.max_queue = config.max_queue
         self.clock = clock if clock is not None else time.monotonic
         self.hooks = fault_hooks
-        self.logits_guard = bool(logits_guard)
+        self.logits_guard = bool(config.logits_guard)
         self.watchdog = watchdog_lib.DecodeStepWatchdog(clock=self.clock)
         self.rejected: list[Request] = []
         self.degraded: list[dict] = []
@@ -546,54 +587,24 @@ class Engine:
             "kernel_faults": 0, "guard_trips": 0,
         }
         self.step_count = 0
-        attn_only = all(t == "attn" for t in cfg.block_pattern)
-        # Vectorized decode is only sound for attention KV caches, where an
-        # inactive row's write lands at a masked position.  Recurrent state
-        # (rec/rwkv) has no position mask — an idle row's state would absorb a
-        # token-0 update every step and later admissions prefill FROM that
-        # state — so those families keep the grouped path.
-        if decode_mode == "vectorized" and not attn_only:
-            decode_mode = "grouped"
-        self.decode_mode = decode_mode
-        # Paged KV needs position-masked attention reads (attn-only, no ring
-        # buffer) and the per-slot pos vector of the vectorized step.
-        if cache_mode == "paged" and (
-            not attn_only or cfg.sliding_window != 0 or decode_mode != "vectorized"
-        ):
-            cache_mode = "dense"
-        self.cache_mode = cache_mode
-        self.sample = sample
-        self._base_key = jax.random.PRNGKey(seed)
+        slots = config.slots
+        max_seq = config.max_seq
+        # Model-dependent mode downgrades (grouped decode for recurrent
+        # families, paged->dense for sliding windows, spec/budget off where
+        # the verify window cannot run) were applied by config.resolve().
+        self.decode_mode = config.decode_mode
+        self.cache_mode = config.cache_mode
+        self.sample = config.sample
+        self._base_key = jax.random.PRNGKey(config.seed)
         self._step_idx = 0
-        # Speculative decode needs the position-masked attention reads of the
-        # vectorized attn-only path (rejected drafts stay masked garbage) and
-        # greedy-exact acceptance — sampled decode has no greedy target to
-        # match, so sampling switches speculation off.
-        self.draft_k = int(draft_k)
-        self.spec_decode = bool(
-            spec_decode
-            and attn_only
-            and cfg.sliding_window == 0
-            and decode_mode == "vectorized"
-            and sample == "greedy"
-            and self.draft_k > 0
-        )
+        self.draft_k = int(config.draft_k)
+        self.spec_decode = bool(config.spec_decode)
         self.drafter = drafter if drafter is not None else spec_lib.propose
-        # Token-budget continuous batching rides the spec-verify machinery
-        # (position-masked attention reads, per-row pos vectors, greedy
-        # commit); any configuration that cannot run a verify window cannot
-        # run a mixed window either, so it degrades to the phase-split path
-        # the same way spec_decode does.
-        if token_budget is not None and not (
-            attn_only
-            and cfg.sliding_window == 0
-            and self.decode_mode == "vectorized"
-            and sample == "greedy"
-        ):
-            token_budget = None
-        self.token_budget = int(token_budget) if token_budget is not None else None
+        self.token_budget = config.token_budget
         self.scheduler = (
-            TokenBudgetScheduler(self.token_budget, aging_steps=slo_aging_steps)
+            TokenBudgetScheduler(
+                self.token_budget, aging_steps=config.slo_aging_steps
+            )
             if self.token_budget is not None
             else None
         )
@@ -622,14 +633,25 @@ class Engine:
             }
             self.slot_proposed = np.zeros(slots, np.int64)
             self.slot_accepted = np.zeros(slots, np.int64)
-        if cache_mode == "paged":
+        if self.cache_mode == "paged":
+            block_size = config.block_size
+            pool_pages = config.pool_pages
             self.block_size = block_size
             self.num_blocks = -(-max_seq // block_size)
             if pool_pages is None:
                 # Parity default: the pool covers the dense worst case, so
                 # nothing preempts unless the caller shrinks it.
                 pool_pages = 1 + slots * self.num_blocks
-            self.alloc = paged_lib.BlockAllocator(pool_pages, block_size)
+            # Tensor-parallel pools mirror one allocator per shard (page
+            # identity must agree; COW/preemption/audit stay shard-local —
+            # serving/paged.ShardedBlockAllocator).
+            self.alloc = (
+                paged_lib.ShardedBlockAllocator(
+                    pool_pages, block_size, shards=self.tp_shards
+                )
+                if self.tp_shards > 1
+                else paged_lib.BlockAllocator(pool_pages, block_size)
+            )
             self.caches = T.cache_init(
                 cfg, slots, max_seq, cache_mode="paged",
                 block_size=block_size, num_pages=pool_pages,
@@ -653,6 +675,16 @@ class Engine:
             self.peak_active = 0
         else:
             self.caches = T.cache_init(cfg, slots, max_seq)
+        if self.mesh is not None:
+            # Head-parallel KV: each shard holds its kv-head slice of every
+            # cache page/row; block tables replicate (they mirror the host
+            # table).  GSPMD propagates these shardings through the jitted
+            # step, so attention runs collective-free until the per-layer
+            # psum at the row-parallel output projection.
+            self.caches = jax.device_put(
+                self.caches,
+                sharding_lib.serving_cache_shardings(self.caches, self.mesh),
+            )
         self.slot_req: list[Request | None] = [None] * slots
         self.slot_pos = np.zeros(slots, np.int32)
         # Prompt tokens already in the slot's cache — equals len(prompt) the
@@ -661,11 +693,7 @@ class Engine:
         self.slot_prefill_done = np.zeros(slots, np.int64)
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
-        self.batch_prefill = (
-            batch_prefill
-            and attn_only
-            and cfg.sliding_window == 0
-        )
+        self.batch_prefill = bool(config.batch_prefill)
 
     def _reject(self, req: Request, reason: str, detail: str) -> Rejected:
         req.status = "rejected"
@@ -779,15 +807,21 @@ class Engine:
             return getattr(self.enc, "attn_backend", None)
         return getattr(self.enc, "backend", None)
 
-    def _quarantine_kernel(self, key: str, reason: str) -> dict:
+    def _quarantine_kernel(
+        self, key: str, reason: str, shard: int | None = None
+    ) -> dict:
         """Demote `key` to the next rung of its dispatch ladder for the rest
         of the process (kernels/registry.demote), record it in
         stats["degraded"], and rebuild the jitted dispatches so the next
-        trace resolves the demoted backend."""
+        trace resolves the demoted backend.  A shard-tagged fault demotes
+        only that shard's ladder entry; the SPMD dispatch still honours it
+        (select takes the max level over shards) but healthy shards keep
+        their own observability rung."""
         requested = self._requested_for(key)
-        before = registry_lib.resolve_key(key, requested=requested)
+        before = registry_lib.resolve_key(key, requested=requested, shard=shard)
         record = registry_lib.demote(
-            key, failing=before.backend, reason=reason, requested=requested
+            key, failing=before.backend, reason=reason,
+            requested=requested, shard=shard,
         )
         entry = {"key": key, "step": self.step_count, **record}
         self.degraded.append(entry)
@@ -810,7 +844,10 @@ class Engine:
                     self.hooks.pre_dispatch(self, kind, keys)
                 return getattr(self, fn_attr)(*args)
             except faults_lib.KernelFaultError as exc:
-                self._quarantine_kernel(exc.key, reason=str(exc))
+                self._quarantine_kernel(
+                    exc.key, reason=str(exc),
+                    shard=getattr(exc, "shard", None),
+                )
                 continue
         raise faults_lib.KernelFaultError(
             keys[0], "kernel dispatch still failing at the fallback rung"
@@ -1168,6 +1205,45 @@ class Engine:
             # from, to, reason}] — the degradation ladder's audit trail.
             "degraded": [dict(d) for d in self.degraded],
         }
+        if self.tp_shards > 1:
+            # Per-shard observability under tensor parallelism: the resolved
+            # attention backend each shard's ladder would pick (the SPMD
+            # dispatch itself runs the max-quarantined rung over shards), and
+            # each shard's slice of the degradation trail (global events
+            # appear in every shard's list).  Legacy string/list forms are
+            # preserved at tp==1 so single-device callers are untouched.
+            attn_s = (
+                self._live_table_width() * self.block_size
+                if self.cache_mode == "paged"
+                else min(self.max_seq, self.cfg.sliding_window)
+                if self.cfg.sliding_window
+                else self.max_seq
+            )
+            out["attn_backend"] = {
+                k: registry_lib.select_attn(
+                    phase=Phase.DECODE,
+                    s=attn_s,
+                    target=self.enc.target,
+                    requested=getattr(self.enc, "attn_backend", "xla"),
+                    shard=k,
+                ).backend
+                for k in range(self.tp_shards)
+            }
+            out["degraded"] = {
+                k: [
+                    dict(d) for d in self.degraded
+                    if d.get("shard") in (None, k)
+                ]
+                for k in range(self.tp_shards)
+            }
+            out["tp"] = {
+                "shards": self.tp_shards,
+                "mesh_shape": list(self.config.mesh_shape),
+                "tp_axis": self.config.tp_axis,
+                "enc_downgrades": list(self.enc_downgrades),
+            }
+        if self.config.downgrades:
+            out["config_downgrades"] = list(self.config.downgrades)
         if self.spec_decode:
             st = dict(self.spec_stats)
             # Amortization terms (docs/PERF.md §Speculative decode): a slot's
@@ -1191,6 +1267,8 @@ class Engine:
                 peak_active=self.peak_active,
                 block_size=self.block_size,
             )
+            if self.tp_shards > 1:
+                out["tp"]["per_shard_pages"] = self.alloc.per_shard_stats()
         return out
 
     def audit(self) -> None:

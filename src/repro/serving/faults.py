@@ -67,11 +67,18 @@ FAULT_KINDS = (
 
 class KernelFaultError(RuntimeError):
     """A (simulated or real) kernel dispatch failure, tagged with the registry
-    key the engine should quarantine."""
+    key the engine should quarantine.  `shard` attributes the fault to one
+    tensor-parallel shard (a single bad device/core): the engine then demotes
+    only that shard's quarantine entry (kernels/registry.demote(shard=...))
+    instead of the key globally.  shard=None (the default, and always the
+    case at mesh=1) keeps the global demotion."""
 
-    def __init__(self, key: str, message: str = "injected kernel fault"):
-        super().__init__(f"{message}: {key}")
+    def __init__(self, key: str, message: str = "injected kernel fault",
+                 *, shard: int | None = None):
+        suffix = f" (shard {shard})" if shard is not None else ""
+        super().__init__(f"{message}: {key}{suffix}")
         self.key = key
+        self.shard = shard
 
 
 @dataclasses.dataclass
@@ -86,6 +93,7 @@ class Fault:
     hold: int = 1                # pool_spike: steps to hold them
     skew_s: float = 0.0          # clock_skew: seconds to jump forward
     where: str = "begin"         # cancel: "begin" (step boundary) | "mid"
+    shard: int | None = None     # kernel_fail: TP shard the fault is local to
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -95,7 +103,7 @@ class Fault:
     def to_dict(self) -> dict:
         out = {"step": self.step, "kind": self.kind}
         defaults = {f.name: f.default for f in dataclasses.fields(Fault)}
-        for name in ("uid", "key", "pages", "hold", "skew_s", "where"):
+        for name in ("uid", "key", "pages", "hold", "skew_s", "where", "shard"):
             val = getattr(self, name)
             if val != defaults[name]:
                 out[name] = val
@@ -264,9 +272,12 @@ class FaultSchedule:
             for key in keys:
                 if fnmatch.fnmatch(key, fault.key or "*"):
                     self._armed_kernel.remove(fault)
-                    self.log.append({"step": self.step, "kind": "kernel_fail",
-                                     "key": key, "dispatch": kind})
-                    raise KernelFaultError(key)
+                    entry = {"step": self.step, "kind": "kernel_fail",
+                             "key": key, "dispatch": kind}
+                    if fault.shard is not None:
+                        entry["shard"] = fault.shard
+                    self.log.append(entry)
+                    raise KernelFaultError(key, shard=fault.shard)
 
     def corrupt_slots(self, engine, active: list[int]) -> list[int]:
         """Called after a decode/verify dispatch with the active slot list;
