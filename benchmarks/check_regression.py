@@ -72,6 +72,14 @@ CHECKS = [
     ("BENCH_decode.json", "tp.token_identical", "min_abs", 1.0),
     ("BENCH_decode.json", "tp.kv_capacity_scaling_2", "min_abs", 1.8),
     ("BENCH_decode.json", "tp.kv_capacity_scaling_4", "baseline_frac", 0.99),
+    # -- quantized KV cache: the kv8 acceptance bar.  kv8 must never flip a
+    #    confident (margin >= median) decision on the seeded stream, pool
+    #    capacity under one HBM budget must scale >= 1.8x vs bf16, and fused
+    #    paged-decode traffic at 4k context must stay <= 0.6x bf16
+    #    (per-page scales included) --
+    ("BENCH_decode.json", "kv8.token_identical_confident", "min_abs", 1.0),
+    ("BENCH_decode.json", "kv8.kv_capacity_scaling", "min_abs", 1.8),
+    ("BENCH_decode.json", "kv8.paged_bytes_ratio_vs_bf16_4k", "max_abs", 0.6),
     # -- wall clock, wide band (catches artificial slowdowns, not runner skew) --
     ("BENCH_decode.json", "engine.vectorized.tok_s", "baseline_frac", 0.2),
     # -- paged KV cache: deterministic scheduler outcomes (seeded stream) --

@@ -137,6 +137,12 @@ def _tune_attn(entries: dict, *, iters: int) -> None:
     prefill; the paged kernel streams at page granularity and shares the
     decode entries' backend).
 
+    Decode keys are measured across the kv-quant axis too (bf16 emits the
+    legacy 4-segment key, kv8/kv4 the 5-segment form): the quantized kernels
+    stream packed K/V plus scale slabs, so the winning chunk size can differ
+    from bf16's.  Prefill stays bf16-only — flash prefill reads the
+    full-precision temp cache; quantization happens at scatter.
+
     Like the matmul tuner, the recorded backend is the STATIC POLICY, never
     a cross-backend measurement: on this interpret-mode CPU container the
     jnp reference beats interpreted Pallas at every shape, so measuring
@@ -152,37 +158,53 @@ def _tune_attn(entries: dict, *, iters: int) -> None:
             _ATTN_DECODE_CANDIDATES if phase is Phase.DECODE
             else _ATTN_PREFILL_CANDIDATES
         )
+        kv_axis = registry_lib.KV_QUANTS if phase is Phase.DECODE else ("bf16",)
         for bucket, s_rep in _ATTN_S_REPS.items():
-            key = registry_lib.attn_dispatch_key(phase, s_rep, target.name)
             backend = registry_lib.default_attn_backend(phase, bucket)
             k = jnp.asarray(rng.randn(b, s_rep, kvh, d), jnp.float32)
             v = jnp.asarray(rng.randn(b, s_rep, kvh, d), jnp.float32)
-            best = None
-            for qc, kc in cands:
-                if phase is Phase.DECODE:
-                    q = jnp.asarray(rng.randn(b, 1, kvh * g, d), jnp.float32)
-                    pos = jnp.asarray([s_rep - 1], jnp.int32)
-                    fn = lambda: attn_lib.dense_decode_attention(
-                        q, k, v, pos, kv_chunk=kc, interpret=True
-                    )
-                else:
-                    sq = min(s_rep, 256)  # prefill band; KV length carries S
-                    q = jnp.asarray(rng.randn(b, sq, kvh * g, d), jnp.float32)
-                    off = s_rep - sq
-                    fn = lambda: attn_lib.flash_prefill_attention(
-                        q, k, v, causal=True, q_offset=off,
-                        q_chunk=qc, kv_chunk=kc, interpret=True,
-                    )
-                t = _time(fn, iters=iters, warmup=1)
-                print(f"tune/{key}/blocks={qc}x{kc},{t * 1e6:.1f},us")
-                if best is None or t < best[0]:
-                    best = (t, (qc, kc))
-            entries[key] = {
-                "backend": backend,
-                "blocks": list(best[1]),
-                "us": round(best[0] * 1e6, 1),
-                "shape_bsd": [b, s_rep, kvh * g * d],
-            }
+            for kvq in kv_axis:
+                key = registry_lib.attn_dispatch_key(
+                    phase, s_rep, target.name, kv=kvq
+                )
+                layout = encoding.kv_layout(kvq)
+                if layout.quantized:
+                    kq, ks = layout.quantize(k)
+                    vq, vs = layout.quantize(v)
+                best = None
+                for qc, kc in cands:
+                    if phase is Phase.DECODE:
+                        q = jnp.asarray(
+                            rng.randn(b, 1, kvh * g, d), jnp.float32)
+                        pos = jnp.asarray([s_rep - 1], jnp.int32)
+                        if layout.quantized:
+                            fn = lambda: attn_lib.dense_decode_attention(
+                                q, kq, vq, pos, k_scale=ks, v_scale=vs,
+                                kv_quant=kvq, kv_chunk=kc, interpret=True,
+                            )
+                        else:
+                            fn = lambda: attn_lib.dense_decode_attention(
+                                q, k, v, pos, kv_chunk=kc, interpret=True
+                            )
+                    else:
+                        sq = min(s_rep, 256)  # prefill band; KV carries S
+                        q = jnp.asarray(
+                            rng.randn(b, sq, kvh * g, d), jnp.float32)
+                        off = s_rep - sq
+                        fn = lambda: attn_lib.flash_prefill_attention(
+                            q, k, v, causal=True, q_offset=off,
+                            q_chunk=qc, kv_chunk=kc, interpret=True,
+                        )
+                    t = _time(fn, iters=iters, warmup=1)
+                    print(f"tune/{key}/blocks={qc}x{kc},{t * 1e6:.1f},us")
+                    if best is None or t < best[0]:
+                        best = (t, (qc, kc))
+                entries[key] = {
+                    "backend": backend,
+                    "blocks": list(best[1]),
+                    "us": round(best[0] * 1e6, 1),
+                    "shape_bsd": [b, s_rep, kvh * g * d],
+                }
 
 
 def tune(
@@ -228,12 +250,17 @@ def tune(
             )
         return _time(fn, iters=iters, warmup=1)
 
-    # Carry over entries of classes not re-measured this run (attn keys are
-    # "attn|..."; everything else is the matmul class).
+    # Carry over entries this run will not re-measure.  The matmul class is
+    # dropped wholesale when re-measured (every matmul key is regenerated
+    # below), but the attn class merges at KEY level: _tune_attn overwrites
+    # exactly the keys it measures, and any other attn entry — a 5-part
+    # kv-quant key pinned on real hardware, another target's key — is
+    # preserved.  Dropping those on every retune would silently erase the
+    # kv axis of the table.
     entries = {
         k: dict(v)
         for k, v in registry_lib.load_table(out_path)["entries"].items()
-        if ("attn" if k.startswith("attn|") else "matmul") not in op_classes
+        if k.startswith("attn|") or "matmul" not in op_classes
     }
     if "attn" in op_classes:
         _tune_attn(entries, iters=iters)

@@ -1045,6 +1045,205 @@ def paged_cache_bench(
     return rows
 
 
+def kv_quant_bench(
+    arch: str = "qwen2-1.5b",
+    *,
+    quick: bool = False,
+    out_json: str = "BENCH_decode.json",
+    out_paged_json: str = "BENCH_paged.json",
+):
+    """Quantized paged KV cache (kv8): the capacity-for-accuracy headline.
+
+      decision preservation — serve one seeded stream under bf16 and kv8;
+        gold tokens teacher-forced back through the bf16 model give per-
+        position top-2 margins, and kv8 must match gold at every CONFIDENT
+        position (margin >= the median — the PR-3 margin-aware harness; a
+        near-tie flipped by rounding is not a decision change).  The streams
+        are free-running, so comparison stops at the first divergence: once
+        a near-tie flips, the histories differ and later positions are not
+        comparable.  A confident-position flip before any divergence fails
+        the metric; the CI gate holds it at 1.0.
+      relMSE — codec-level: decode-attention output on the dequantized kv8
+        cache vs the raw bf16 cache, same inputs.
+      capacity — requests in flight under ONE KV HBM budget, bf16 vs kv8
+        pool (encoding.kv_capacity_requests with the layout's bytes/token);
+        the CI gate holds the ratio >= 1.8.
+      traffic — paged decode fused HBM bytes/token at 4k context, kv8 vs
+        bf16 (per-page scales included); gated <= 0.6.
+
+    Merges a "kv8" section into BENCH_decode.json, a "kv_quant" section into
+    BENCH_paged.json, and returns CSV rows."""
+    from repro.models import layers as L
+
+    cfg = registry.get_reduced(arch)
+    enc = EncodingConfig(enabled=True, backend="xla")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
+
+    max_seq = 64
+    block_size = 8
+    rng = np.random.RandomState(0)
+    n_req = 4 if quick else 8
+    max_new = 6 if quick else 10
+    prompts = [
+        rng.randint(1, cfg.vocab_size, int(rng.randint(5, 13))).astype(np.int32)
+        for _ in range(n_req)
+    ]
+
+    def serve(kv_quant):
+        eng = engine_lib.Engine(
+            params, cfg, enc,
+            slots=3, max_seq=max_seq, cache_mode="paged",
+            block_size=block_size, kv_quant=kv_quant,
+        )
+        for i, p in enumerate(prompts):
+            eng.submit(engine_lib.Request(
+                uid=i, prompt=p, max_new_tokens=max_new))
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        eng.audit()
+        assert all(r.status == "ok" for r in eng.finished)
+        toks = {r.uid: list(r.generated) for r in eng.finished}
+        return toks, sum(len(g) for g in toks.values()) / dt, eng
+
+    gold, bf16_tok_s, _ = serve("bf16")
+    got, kv8_tok_s, eng8 = serve("kv8")
+    assert eng8.stats["kv_quant"] == "kv8"
+
+    # Teacher-force each gold continuation through the bf16 model: logits at
+    # prompt_end-1 .. end-1 produced each generated token; their top-2
+    # margins say where the decision was confident.
+    conf_total = conf_match = 0
+    all_identical = True
+    for uid, g in sorted(gold.items()):
+        seq = np.concatenate([prompts[uid], np.asarray(g, np.int32)])
+        logits, _, _ = T.forward(
+            params, {"tokens": jnp.asarray(seq[None, :])}, cfg=cfg, enc=enc,
+            phase=Phase.PREFILL,
+        )
+        lg = logits[0, len(prompts[uid]) - 1: len(seq) - 1]  # one per gen tok
+        top2 = jax.lax.top_k(lg, 2)[0]
+        margin = np.asarray(top2[:, 0] - top2[:, 1])
+        confident = margin >= np.median(margin)
+        for i, (gt, kt) in enumerate(zip(g, got[uid])):
+            if gt == kt:
+                if confident[i]:
+                    conf_total += 1
+                    conf_match += 1
+                continue
+            # First divergence: a confident flip counts against the metric;
+            # a near-tie flip is tolerated.  Either way the histories differ
+            # from here on, so later positions are not comparable — stop.
+            all_identical = False
+            if confident[i]:
+                conf_total += 1
+            break
+    token_identical_confident = (
+        1.0 if conf_total and conf_match == conf_total else 0.0
+    )
+
+    # Codec relMSE on the decode-attention output (dequantized kv8 cache vs
+    # the raw cache, identical queries/positions).
+    layout = encoding.kv_layout("kv8")
+    rng2 = np.random.RandomState(1)
+    b, h, kv, d, s = 2, 4, 2, 16, 32
+    k_raw = jnp.asarray(rng2.randn(b, s, kv, d), jnp.float32)
+    v_raw = jnp.asarray(rng2.randn(b, s, kv, d), jnp.float32)
+    q = jnp.asarray(rng2.randn(b, 1, h, d), jnp.float32)
+    pos = jnp.asarray(rng2.randint(8, s, b), jnp.int32)
+    o_fp = L.attention_decode(q, k_raw, v_raw, pos=pos, window=0)
+    kq, ks = layout.quantize(k_raw)
+    vq, vs = layout.quantize(v_raw)
+    o_q = L.attention_decode(
+        q, layout.dequantize(kq, ks), layout.dequantize(vq, vs),
+        pos=pos, window=0,
+    )
+    rel_mse = float(jnp.sum(jnp.square(o_q - o_fp)) / jnp.sum(jnp.square(o_fp)))
+
+    # Capacity under one HBM budget: the paged_cache_bench budget, repriced
+    # per layout (scale pages included in bytes/token).
+    itemsize = jnp.dtype(cfg.activation_dtype).itemsize
+    hbm_budget = encoding.dense_kv_hbm_bytes(
+        4, 128, cfg.num_layers, cfg.num_kv_heads, cfg.head_dim,
+        itemsize=itemsize,
+    )
+    cap = {
+        kvq: encoding.kv_capacity_requests(
+            hbm_budget, max_seq=128, mean_tokens=24, block_size=block_size,
+            num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, itemsize=itemsize, kv_quant=kvq,
+        )
+        for kvq in ("bf16", "kv8", "kv4")
+    }
+    capacity_scaling = (
+        cap["kv8"]["paged"] / max(cap["bf16"]["paged"], 1)
+    )
+
+    # Paged decode traffic at 4k context, full-size KV geometry (the same
+    # geometry attention_bench prices): fused bytes/token kv8 vs bf16.
+    kvh, hd, layers = 8, 64, 16
+    traffic = {
+        kvq: encoding.decode_attn_hbm_bytes(
+            4096, max_seq=4096, block_size=16, num_kv_heads=kvh, head_dim=hd,
+            num_layers=layers, itemsize=2, kv_quant=kvq,
+        )
+        for kvq in ("bf16", "kv8", "kv4")
+    }
+    bytes_ratio_4k = traffic["kv8"]["fused"] / traffic["bf16"]["fused"]
+
+    kv8_stats = {
+        "token_identical_confident": token_identical_confident,
+        "token_identical_all_positions": 1.0 if all_identical else 0.0,
+        "confident_positions": conf_total,
+        "rel_mse_attn_out": rel_mse,
+        "kv_capacity_scaling": capacity_scaling,
+        "kv4_capacity_scaling": (
+            cap["kv4"]["paged"] / max(cap["bf16"]["paged"], 1)
+        ),
+        "paged_bytes_ratio_vs_bf16_4k": bytes_ratio_4k,
+        "kv4_bytes_ratio_vs_bf16_4k": (
+            traffic["kv4"]["fused"] / traffic["bf16"]["fused"]
+        ),
+        "bytes_per_cached_token": {
+            kvq: traffic[kvq]["bytes_per_cached_token"]
+            for kvq in ("bf16", "kv8", "kv4")
+        },
+        "bf16_tok_s": bf16_tok_s,
+        "kv8_tok_s": kv8_tok_s,
+    }
+    try:
+        with open(out_json) as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {}
+    result["kv8"] = kv8_stats
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    # Capacity detail rides with the paged-cache results.
+    try:
+        with open(out_paged_json) as f:
+            presult = json.load(f)
+    except (OSError, ValueError):
+        presult = {}
+    presult["kv_quant"] = {
+        "hbm_budget_bytes": int(hbm_budget),
+        "capacity_requests": {
+            kvq: cap[kvq]["paged"] for kvq in ("bf16", "kv8", "kv4")
+        },
+        "kv8_capacity_scaling": capacity_scaling,
+    }
+    with open(out_paged_json, "w") as f:
+        json.dump(presult, f, indent=2)
+    return [
+        ("kv8/token_identical_confident", token_identical_confident),
+        ("kv8/rel_mse_attn_out", rel_mse),
+        ("kv8/kv_capacity_scaling", capacity_scaling),
+        ("kv8/paged_bytes_ratio_vs_bf16_4k", bytes_ratio_4k),
+        ("kv8/tok_s", kv8_tok_s),
+        ("kv8/bf16_tok_s", bf16_tok_s),
+    ]
+
+
 def main(*, quick: bool = False):
     if not quick:
         for name, val in model_throughput():
@@ -1065,6 +1264,8 @@ def main(*, quick: bool = False):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in paged_cache_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_paged.json")
+    for name, val in kv_quant_bench(quick=quick):
+        print(f"{name},{val:.4f},see-BENCH_decode.json")
 
 
 if __name__ == "__main__":

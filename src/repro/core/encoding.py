@@ -211,11 +211,147 @@ def decode_weight_stream_tok_s(
     return target.hbm_bytes_per_s / max(1, weight_bytes)
 
 
+# ---------------------------------------------------------------------------
+# Quantized KV-cache layouts (kv8 / kv4).
+#
+# The same fuse-dequant-into-the-contraction move the mmt4d_q4 weight path
+# proves out, applied to the OTHER decode HBM stream: K/V pages are stored
+# int8 (kv8) or packed int4 nibbles (kv4) with a float32 per-token-per-head
+# scale living in parallel *scale pages* (same page geometry as the data
+# pages, so the BlockAllocator's page ids index both).  The attention kernels
+# ride the scale pages as extra BlockSpec operands and dequantize tile-locally
+# in VMEM before the online-softmax accumulate (kernels/attn.py).
+
+KV_QUANTS = ("bf16", "kv8", "kv4")
+KV_SCALE_ITEMSIZE = 4  # float32 scale per (token, kv-head)
+
+
+def _unpack_nibbles(packed):
+    """(…, hd//2) packed uint8 -> (…, hd) int32 in [-8, 7].
+
+    Even head_dim elements live in the low nibble, odd in the high nibble
+    (two's complement).  Pure jnp, safe inside Pallas kernel bodies."""
+    b = packed.astype(jnp.int32)
+    lo = b & 0xF
+    hi = (b >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    return jnp.stack([lo, hi], axis=-1).reshape(*b.shape[:-1], b.shape[-1] * 2)
+
+
+def _pack_nibbles(q):
+    """(…, hd) int32 in [-8, 7] -> (…, hd//2) uint8 (inverse of _unpack_nibbles)."""
+    lo = q[..., 0::2] & 0xF
+    hi = q[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+@dataclasses.dataclass(frozen=True)
+class KVLayout:
+    """One KV-cache storage layout: dtype, scale shape, codec, byte accounting.
+
+    Every layer that touches K/V arrays goes through this object instead of
+    assuming raw bf16: cache init sizes the leaves (`storage_head_dim`,
+    `scale_shape`), the scatter-write paths quantize per page (`quantize`),
+    the attention kernels / XLA fallback dequantize (`dequantize`), and the
+    capacity math prices a cached token (`bytes_per_token_per_head`).
+
+    Scales are per (token, kv-head) — decode scatters single tokens into
+    pages with `.at[page, offset].set`, so a per-page *scalar* would
+    retroactively re-scale previously written tokens; per-token scales kept
+    in page-shaped scale arrays give page-granular alloc/free/COW with
+    write-once token semantics.
+    """
+
+    name: str
+    storage_dtype: object | None  # None = keep the model activation dtype
+    pack_ratio: int               # head_dim elements per storage element
+    qmax: int                     # symmetric integer clip bound (0 = unquantized)
+
+    @property
+    def quantized(self) -> bool:
+        return self.qmax > 0
+
+    def storage_head_dim(self, head_dim: int) -> int:
+        if self.pack_ratio > 1 and head_dim % self.pack_ratio:
+            raise ValueError(
+                f"{self.name}: head_dim {head_dim} not divisible by pack "
+                f"ratio {self.pack_ratio}"
+            )
+        return head_dim // self.pack_ratio
+
+    def scale_shape(self, lead: tuple[int, ...], num_kv_heads: int) -> tuple[int, ...]:
+        """Shape of the scale leaf matching data-leaf leading dims `lead`
+        (e.g. (num_pages, block) or (batch, seq)) — heads stay at axis -2
+        so the TP sharding rule for K/V applies unchanged."""
+        return (*lead, num_kv_heads, 1)
+
+    def bytes_per_token_per_head(self, head_dim: int) -> float:
+        if not self.quantized:
+            return float(head_dim * 2)  # bf16 storage, no scales
+        return float(
+            self.storage_head_dim(head_dim) * jnp.dtype(self.storage_dtype).itemsize
+            + KV_SCALE_ITEMSIZE
+        )
+
+    def quantize(self, x):
+        """(…, hd) float -> (q (…, hd / pack_ratio) storage_dtype,
+        scale (…, 1) float32).  Symmetric absmax per (token, head) row."""
+        assert self.quantized, f"{self.name} has no codec"
+        xf = x.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+        scale = jnp.maximum(amax, 1e-8) / self.qmax
+        q = jnp.clip(jnp.round(xf / scale), -self.qmax, self.qmax).astype(jnp.int32)
+        if self.pack_ratio > 1:
+            return _pack_nibbles(q), scale
+        return q.astype(self.storage_dtype), scale
+
+    def dequantize(self, q, scale):
+        """Inverse of `quantize` -> float32.  Pure jnp — the attention
+        kernels call this on VMEM-resident tiles."""
+        assert self.quantized, f"{self.name} has no codec"
+        vals = _unpack_nibbles(q) if self.pack_ratio > 1 else q.astype(jnp.int32)
+        return vals.astype(jnp.float32) * scale
+
+
+_KV_LAYOUTS = {
+    "bf16": KVLayout(name="bf16", storage_dtype=None, pack_ratio=1, qmax=0),
+    "kv8": KVLayout(name="kv8", storage_dtype=jnp.int8, pack_ratio=1, qmax=127),
+    "kv4": KVLayout(name="kv4", storage_dtype=jnp.uint8, pack_ratio=2, qmax=7),
+}
+
+
+def kv_layout(name: str) -> KVLayout:
+    try:
+        return _KV_LAYOUTS[name]
+    except KeyError:
+        raise ValueError(f"unknown kv_quant {name!r}; expected one of {KV_QUANTS}")
+
+
+def kv_layout_for_storage(dtype) -> KVLayout:
+    """Recover the layout from a cache leaf's dtype — caches are
+    self-describing, so jitted model code never needs the config threaded
+    through (int8 pools = kv8, packed uint8 = kv4, floats = bf16)."""
+    dt = jnp.dtype(dtype)
+    if dt == jnp.dtype(jnp.int8):
+        return _KV_LAYOUTS["kv8"]
+    if dt == jnp.dtype(jnp.uint8):
+        return _KV_LAYOUTS["kv4"]
+    return _KV_LAYOUTS["bf16"]
+
+
 def kv_bytes_per_token(
-    num_layers: int, num_kv_heads: int, head_dim: int, *, itemsize: int = 2
+    num_layers: int, num_kv_heads: int, head_dim: int, *, itemsize: int = 2,
+    kv_quant: str = "bf16",
 ) -> int:
-    """HBM bytes one cached token costs across all layers (K and V)."""
-    return 2 * num_layers * num_kv_heads * head_dim * itemsize
+    """HBM bytes one cached token costs across all layers (K and V).
+
+    For quantized layouts the per-head cost comes from the KVLayout codec
+    (storage bytes + the float32 scale); `itemsize` only prices bf16."""
+    if kv_quant in (None, "bf16"):
+        return 2 * num_layers * num_kv_heads * head_dim * itemsize
+    per_head = kv_layout(kv_quant).bytes_per_token_per_head(head_dim)
+    return int(2 * num_layers * num_kv_heads * per_head)
 
 
 def decode_attn_hbm_bytes(
@@ -227,6 +363,7 @@ def decode_attn_hbm_bytes(
     head_dim: int,
     num_layers: int = 1,
     itemsize: int = 2,
+    kv_quant: str = "bf16",
 ) -> dict[str, float]:
     """Decode-attention HBM traffic model for ONE generated token of ONE
     sequence at `context` cached tokens (all layers, K and V).
@@ -246,10 +383,15 @@ def decode_attn_hbm_bytes(
     blocks.  This is the O(pool) -> O(live) conversion the attention op
     class buys; `ratio` = fused / gather is the CI-gated headline
     (<= 0.5 at 4k context — benchmarks/check_regression.py).
+
+    `kv_quant` prices the stream per KVLayout: kv8/kv4 shrink every row
+    (the kernel streams the int pages plus their scale pages instead of
+    bf16) — the second CI-gated headline is fused(kv8)/fused(bf16) <= 0.6
+    at 4k context (docs/PERF.md §Decode-attention traffic).
     """
     max_seq = max_seq or context
     per_tok = kv_bytes_per_token(
-        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize, kv_quant=kv_quant
     )
     view = -(-max_seq // block_size) * block_size
     live = max(1, -(-context // block_size)) * block_size
@@ -261,6 +403,7 @@ def decode_attn_hbm_bytes(
         "fused": float(fused),
         "ratio": fused / gather,
         "bytes_per_cached_token": float(per_tok),
+        "kv_quant": kv_quant,
     }
 
 
@@ -271,35 +414,38 @@ def attn_weight_crossover_tokens(
     head_dim: int,
     num_layers: int,
     itemsize: int = 2,
+    kv_quant: str = "bf16",
 ) -> float:
     """Context length where fused decode-attention traffic equals the
     per-token weight stream: past this many cached tokens, KV traffic — not
     the weight stream — is the decode roofline, which is why attention was
     the mandatory next microkernel after the w4a8 weight path (docs/PERF.md
-    §Decode-attention traffic)."""
+    §Decode-attention traffic).  Quantized KV pushes the crossover out by
+    the bytes/token ratio (kv8 ~1.9x, kv4 ~3.6x at hd=64)."""
     per_tok = kv_bytes_per_token(
-        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize, kv_quant=kv_quant
     )
     return weight_stream_bytes / max(1, per_tok)
 
 
 def dense_kv_hbm_bytes(
     slots: int, max_seq: int, num_layers: int, num_kv_heads: int, head_dim: int,
-    *, itemsize: int = 2,
+    *, itemsize: int = 2, kv_quant: str = "bf16",
 ) -> int:
     """Dense serving reservation: every slot pays worst-case max_seq tokens."""
     return slots * max_seq * kv_bytes_per_token(
-        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize, kv_quant=kv_quant
     )
 
 
 def paged_kv_hbm_bytes(
     num_pages: int, block_size: int, num_layers: int, num_kv_heads: int,
-    head_dim: int, *, itemsize: int = 2,
+    head_dim: int, *, itemsize: int = 2, kv_quant: str = "bf16",
 ) -> int:
-    """Paged pool footprint (scratch page included): pages x block tokens."""
+    """Paged pool footprint (scratch page included): pages x block tokens.
+    Quantized layouts count the scale pages too (KVLayout accounting)."""
     return num_pages * block_size * kv_bytes_per_token(
-        num_layers, num_kv_heads, head_dim, itemsize=itemsize
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize, kv_quant=kv_quant
     )
 
 
@@ -313,6 +459,7 @@ def kv_capacity_requests(
     num_kv_heads: int,
     head_dim: int,
     itemsize: int = 2,
+    kv_quant: str = "bf16",
 ) -> dict[str, int]:
     """Concurrent requests one KV HBM budget sustains, dense vs paged.
 
@@ -320,8 +467,12 @@ def kv_capacity_requests(
     ceil(mean_tokens / block_size) pages per in-flight request (mean_tokens =
     typical prompt + generated length), so the capacity ratio is roughly
     max_seq / round_up(mean_tokens, block_size) — the serving-plan headroom
-    the paged engine converts into admitted requests (docs/PERF.md)."""
-    ptb = kv_bytes_per_token(num_layers, num_kv_heads, head_dim, itemsize=itemsize)
+    the paged engine converts into admitted requests (docs/PERF.md).
+    `kv_quant` shrinks bytes_per_token via the KVLayout, multiplying the
+    pool a fixed budget sustains (the kv8 bench gate pins >= 1.8x bf16)."""
+    ptb = kv_bytes_per_token(
+        num_layers, num_kv_heads, head_dim, itemsize=itemsize, kv_quant=kv_quant
+    )
     dense = hbm_budget // max(1, max_seq * ptb)
     blocks_per_req = max(1, -(-mean_tokens // block_size))
     paged = hbm_budget // max(1, blocks_per_req * block_size * ptb)
@@ -344,6 +495,7 @@ def tp_kv_capacity_requests(
     num_kv_heads: int,
     head_dim: int,
     itemsize: int = 2,
+    kv_quant: str = "bf16",
 ) -> dict[str, float]:
     """`kv_capacity_requests` under head-parallel tensor parallelism
     (docs/PERF.md §Tensor-parallel capacity math).
@@ -368,11 +520,13 @@ def tp_kv_capacity_requests(
         hbm_budget_per_shard, max_seq=max_seq, mean_tokens=mean_tokens,
         block_size=block_size, num_layers=num_layers,
         num_kv_heads=num_kv_heads, head_dim=head_dim, itemsize=itemsize,
+        kv_quant=kv_quant,
     )
     local = kv_capacity_requests(
         hbm_budget_per_shard, max_seq=max_seq, mean_tokens=mean_tokens,
         block_size=block_size, num_layers=num_layers,
         num_kv_heads=local_heads, head_dim=head_dim, itemsize=itemsize,
+        kv_quant=kv_quant,
     )
     return {
         "dense": local["dense"],

@@ -31,8 +31,19 @@ bitwise identical to skip-by-guard — the paged and dense kernels produce
 bit-identical outputs whenever their streaming granularity matches
 (dense kv_chunk == page block size; tests/test_attn_kernels.py pins this).
 
+Quantized KV layouts (core/encoding.KVLayout, kv8/kv4): the paged and dense
+decode kernels ride the per-page scale arrays as extra BlockSpec operands —
+same index maps as their data pages, so a scale tile arrives in VMEM with
+its page — and dequantize tile-locally before the online-softmax accumulate.
+The contraction itself never sees int storage, and nothing dequantized is
+ever written back to HBM.  Prefill writes quantized through the engine's
+scatter path (models/layers.py quantizes per page on write); chunked-prefill
+continuation reads its prior pages back through these same dequantizing
+decode kernels.
+
 Dispatch routing lives in kernels/registry.py (`select_attn`, the second op
-class: attn|phase|S-bucket|target); models/layers.py consults it per call.
+class: attn|phase|S-bucket[|kv]|target); models/layers.py consults it per
+call.
 """
 
 from __future__ import annotations
@@ -44,6 +55,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import encoding
 from repro.kernels import pl_compat
 
 
@@ -86,14 +98,29 @@ def _norm_pos(pos, b) -> jnp.ndarray:
     return jnp.broadcast_to(jnp.atleast_1d(p), (b,))
 
 
+def _dequant_kv(kv_quant: str, k_raw, v_raw, ks, vs):
+    """VMEM-tile dequantization: int storage tiles + their scale tiles ->
+    float32 (bs, KV, D) chunks the shared online-softmax body consumes.
+    bf16 passes the raw tiles through untouched."""
+    if kv_quant == "bf16":
+        return k_raw, v_raw
+    lay = encoding.kv_layout(kv_quant)
+    return lay.dequantize(k_raw, ks), lay.dequantize(v_raw, vs)
+
+
 # ---------------------------------------------------------------------------
 # Fused paged-decode attention (in-kernel block-table gather)
 
 
 def _paged_decode_kernel(
-    table_ref, pos_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
-    *, bs: int, L: int, kvh: int, g: int, scale: float,
+    table_ref, pos_ref, q_ref, k_ref, v_ref, *refs,
+    bs: int, L: int, kvh: int, g: int, scale: float, kv_quant: str,
 ):
+    if kv_quant == "bf16":
+        ks_ref = vs_ref = None
+        out_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ks_ref, vs_ref, out_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -111,14 +138,20 @@ def _paged_decode_kernel(
     def _():
         d = q_ref.shape[-1]
         qg = q_ref[0].reshape(L, kvh, g, d) * scale
-        k = k_ref[0]  # (bs, KV, D) — ONE pool page, gathered via index map
+        # (bs, KV, D) — ONE pool page (+ its scale page), gathered via
+        # index map and dequantized here in VMEM for quantized layouts.
+        k, v = _dequant_kv(
+            kv_quant, k_ref[0], v_ref[0],
+            None if ks_ref is None else ks_ref[0],
+            None if vs_ref is None else vs_ref[0],
+        )
         s = jnp.einsum(
             "lkgd,ckd->lkgc", qg, k, preferred_element_type=jnp.float32
         )
         slot = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, bs), 3)
         qpos = pos_b + jax.lax.broadcasted_iota(jnp.int32, (L, 1, 1, 1), 0)
         valid = slot <= qpos  # masked-causal inside the verify window
-        _online_update(s, valid, v_ref[0], m_ref, l_ref, acc_ref)
+        _online_update(s, valid, v, m_ref, l_ref, acc_ref)
 
     @pl.when(j == nb - 1)
     def _():
@@ -126,14 +159,17 @@ def _paged_decode_kernel(
                   out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("kv_quant", "interpret"))
 def paged_decode_attention(
     q: jnp.ndarray,       # (B, L, H, D)
-    k_pool: jnp.ndarray,  # (P, bs, KV, D) physical pages
-    v_pool: jnp.ndarray,  # (P, bs, KV, D)
+    k_pool: jnp.ndarray,  # (P, bs, KV, Ds) physical pages (Ds = stored D)
+    v_pool: jnp.ndarray,  # (P, bs, KV, Ds)
     table: jnp.ndarray,   # (B, NB) int32 page ids (logical block -> page)
     pos: jnp.ndarray,     # () or (B,) int32 position of q[:, 0]
     *,
+    k_scale: jnp.ndarray | None = None,  # (P, bs, KV, 1) f32 scale pages
+    v_scale: jnp.ndarray | None = None,
+    kv_quant: str = "bf16",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Decode attention straight off the page pool: gathers each row's live
@@ -145,33 +181,48 @@ def paged_decode_attention(
 
     Streams ceil((pos+L)/bs) pages per row instead of materializing the
     (B, NB*bs, KV, D) `paged_gather` view — the O(pool) -> O(live) win.
+
+    Quantized layouts (kv_quant "kv8"/"kv4"): the pools hold int storage
+    (kv4 packs two nibbles per byte along D) and `k_scale`/`v_scale` are
+    the matching scale pages; each grid step's scale tile rides the SAME
+    index map as its data page and is dequantized in VMEM right before
+    the score contraction — the scale stream adds 4 bytes/token/head
+    against the >= 2x shrink of the data stream.
     """
     b, L, h, d = q.shape
-    _, bs, kvh, _ = k_pool.shape
+    _, bs, kvh, ds = k_pool.shape
     nb = table.shape[1]
     g = h // kvh
     scale = d**-0.5
     posv = _norm_pos(pos, b)
+    quantized = kv_quant != "bf16"
+    assert (k_scale is not None) == quantized, (kv_quant, k_scale is None)
 
     def live_block(bi, j, tbl, pv):
         # Clamp beyond-live steps to the last live page: the block index is
         # then unchanged from the previous step and the copy is elided.
         return tbl[bi, jnp.minimum(j, (pv[bi] + L - 1) // bs)]
 
+    def page_spec(width):
+        return pl.BlockSpec(
+            (1, bs, kvh, width),
+            lambda bi, j, tbl, pv: (live_block(bi, j, tbl, pv), 0, 0, 0),
+        )
+
+    in_specs = [
+        pl.BlockSpec((1, L, h, d), lambda bi, j, tbl, pv: (bi, 0, 0, 0)),
+        page_spec(ds),
+        page_spec(ds),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [page_spec(1), page_spec(1)]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, nb),
-        in_specs=[
-            pl.BlockSpec((1, L, h, d), lambda bi, j, tbl, pv: (bi, 0, 0, 0)),
-            pl.BlockSpec(
-                (1, bs, kvh, d),
-                lambda bi, j, tbl, pv: (live_block(bi, j, tbl, pv), 0, 0, 0),
-            ),
-            pl.BlockSpec(
-                (1, bs, kvh, d),
-                lambda bi, j, tbl, pv: (live_block(bi, j, tbl, pv), 0, 0, 0),
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, L, h, d), lambda bi, j, tbl, pv: (bi, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((L, kvh, g), jnp.float32),
@@ -180,7 +231,8 @@ def paged_decode_attention(
         ],
     )
     kernel = functools.partial(
-        _paged_decode_kernel, bs=bs, L=L, kvh=kvh, g=g, scale=scale
+        _paged_decode_kernel,
+        bs=bs, L=L, kvh=kvh, g=g, scale=scale, kv_quant=kv_quant,
     )
     return pl.pallas_call(
         kernel,
@@ -191,7 +243,7 @@ def paged_decode_attention(
         ),
         interpret=interpret,
         name="paged_decode_attention",
-    )(table.astype(jnp.int32), posv, q, k_pool, v_pool)
+    )(table.astype(jnp.int32), posv, *operands)
 
 
 # ---------------------------------------------------------------------------
@@ -199,9 +251,15 @@ def paged_decode_attention(
 
 
 def _dense_decode_kernel(
-    pos_ref, q_ref, k_ref, v_ref, out_ref, m_ref, l_ref, acc_ref,
-    *, kc: int, s_c: int, window: int, L: int, kvh: int, g: int, scale: float,
+    pos_ref, q_ref, k_ref, v_ref, *refs,
+    kc: int, s_c: int, window: int, L: int, kvh: int, g: int, scale: float,
+    kv_quant: str,
 ):
+    if kv_quant == "bf16":
+        ks_ref = vs_ref = None
+        out_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        ks_ref, vs_ref, out_ref, m_ref, l_ref, acc_ref = refs
     b = pl.program_id(0)
     j = pl.program_id(1)
     nk = pl.num_programs(1)
@@ -220,20 +278,25 @@ def _dense_decode_kernel(
     def _():
         d = q_ref.shape[-1]
         qg = q_ref[0].reshape(L, kvh, g, d) * scale
+        k, v = _dequant_kv(
+            kv_quant, k_ref[0], v_ref[0],
+            None if ks_ref is None else ks_ref[0],
+            None if vs_ref is None else vs_ref[0],
+        )
         s = jnp.einsum(
-            "lkgd,ckd->lkgc", qg, k_ref[0], preferred_element_type=jnp.float32
+            "lkgd,ckd->lkgc", qg, k, preferred_element_type=jnp.float32
         )
         slot = j * kc + jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, kc), 3)
         qpos = pos_b + jax.lax.broadcasted_iota(jnp.int32, (L, 1, 1, 1), 0)
         # Tail guard: when kc does not divide S_c the last block reads past
         # the cache (Pallas pads the edge block; content is undefined) —
         # mask those columns out of the scores AND zero their V rows so no
-        # garbage bit pattern (even a NaN encoding) can reach the
-        # accumulator through 0 * v.
+        # garbage bit pattern (even a NaN encoding, pre- or post-dequant)
+        # can reach the accumulator through 0 * v.
         in_range = slot < s_c
         v = jnp.where(
             (j * kc + jax.lax.broadcasted_iota(jnp.int32, (kc, 1, 1), 0)) < s_c,
-            v_ref[0], 0.0,
+            v, 0.0,
         )
         if window > 0:
             # Same mask as layers.attention_decode: rows still inside the
@@ -253,26 +316,36 @@ def _dense_decode_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("window", "kv_chunk", "interpret")
+    jax.jit, static_argnames=("window", "kv_chunk", "kv_quant", "interpret")
 )
 def dense_decode_attention(
     q: jnp.ndarray,        # (B, L, H, D)
-    k_cache: jnp.ndarray,  # (B, S_c, KV, D)
-    v_cache: jnp.ndarray,  # (B, S_c, KV, D)
+    k_cache: jnp.ndarray,  # (B, S_c, KV, Ds)
+    v_cache: jnp.ndarray,  # (B, S_c, KV, Ds)
     pos: jnp.ndarray,      # () or (B,) int32 position of q[:, 0]
     *,
     window: int = 0,
     kv_chunk: int | None = None,
+    k_scale: jnp.ndarray | None = None,  # (B, S_c, KV, 1) f32
+    v_scale: jnp.ndarray | None = None,
+    kv_quant: str = "bf16",
     interpret: bool = False,
 ) -> jnp.ndarray:
     """Dense-cache decode attention: K/V streamed in kv_chunk slabs with the
     same online softmax as the paged kernel (kv_chunk == page block size
-    gives bit-identical outputs), ring-window mask for sliding-window caches,
-    per-row positions, L > 1 masked-causal verify window (window == 0 only —
-    the same contract layers.attention_decode enforces)."""
+    gives bit-identical outputs — kv8 included, since both kernels dequantize
+    the identical tile values in the identical accumulate order), ring-window
+    mask for sliding-window caches, per-row positions, L > 1 masked-causal
+    verify window (window == 0 only — the same contract
+    layers.attention_decode enforces).  Quantized layouts stream the scale
+    slabs alongside their K/V chunks and dequantize in VMEM; ring windows
+    stay bf16 (the paged pool owns the quantized serving path)."""
     b, L, h, d = q.shape
-    _, s_c, kvh, _ = k_cache.shape
+    _, s_c, kvh, ds = k_cache.shape
     assert L == 1 or window == 0, (L, window)
+    quantized = kv_quant != "bf16"
+    assert (k_scale is not None) == quantized, (kv_quant, k_scale is None)
+    assert window == 0 or not quantized, (window, kv_quant)
     g = h // kvh
     scale = d**-0.5
     posv = _norm_pos(pos, b)
@@ -286,18 +359,26 @@ def dense_decode_attention(
             return j  # ring chunks are all potentially live
         return jnp.minimum(j, (pv[bi] + L - 1) // kc)
 
+    def chunk_spec(width):
+        return pl.BlockSpec(
+            (1, kc, kvh, width),
+            lambda bi, j, pv: (bi, live_chunk(bi, j, pv), 0, 0),
+        )
+
+    in_specs = [
+        pl.BlockSpec((1, L, h, d), lambda bi, j, pv: (bi, 0, 0, 0)),
+        chunk_spec(ds),
+        chunk_spec(ds),
+    ]
+    operands = [q, k_cache, v_cache]
+    if quantized:
+        in_specs += [chunk_spec(1), chunk_spec(1)]
+        operands += [k_scale, v_scale]
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(b, nk),
-        in_specs=[
-            pl.BlockSpec((1, L, h, d), lambda bi, j, pv: (bi, 0, 0, 0)),
-            pl.BlockSpec(
-                (1, kc, kvh, d), lambda bi, j, pv: (bi, live_chunk(bi, j, pv), 0, 0)
-            ),
-            pl.BlockSpec(
-                (1, kc, kvh, d), lambda bi, j, pv: (bi, live_chunk(bi, j, pv), 0, 0)
-            ),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, L, h, d), lambda bi, j, pv: (bi, 0, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((L, kvh, g), jnp.float32),
@@ -308,6 +389,7 @@ def dense_decode_attention(
     kernel = functools.partial(
         _dense_decode_kernel,
         kc=kc, s_c=s_c, window=window, L=L, kvh=kvh, g=g, scale=scale,
+        kv_quant=kv_quant,
     )
     return pl.pallas_call(
         kernel,
@@ -318,7 +400,7 @@ def dense_decode_attention(
         ),
         interpret=interpret,
         name="dense_decode_attention",
-    )(posv, q, k_cache, v_cache)
+    )(posv, *operands)
 
 
 # ---------------------------------------------------------------------------

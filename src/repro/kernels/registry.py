@@ -18,13 +18,23 @@ matmul (select()):
 
 attention (select_attn()):
 
-    ("attn", phase, S-bucket, target name)  ->  KernelChoice(backend, blocks)
+    ("attn", phase, S-bucket[, kv-quant], target name)
+        ->  KernelChoice(backend, blocks)
 
 * S-bucket   : context-length regime — "s256"/"s1k"/"s4k"/"sbig" over the
                logical KV length the dispatch attends (cache width at
                decode, key length at prefill).  Attention cost scales with
                S the way matmul cost scales with M, so S plays the bucket
                role here.
+* kv-quant   : the KV-cache storage layout the kernel streams ("bf16",
+               "kv8", "kv4" — core/encoding.KV_QUANTS).  bf16 keys keep
+               the legacy 4-segment form `attn|{phase}|{S}|{target}` so
+               every checked-in tuned entry, fault-schedule fnmatch
+               pattern, and quarantine record stays valid; quantized
+               layouts insert the axis: `attn|{phase}|{S}|{kv}|{target}`.
+               A kv-quant key with no tuned entry inherits the bf16
+               entry's blocks (chunking geometry is dtype-independent
+               until a retune says otherwise).
 * backend    : "xla" (the jnp references layers.attention_decode /
                attention_chunked) or "pallas" (kernels/attn.py — paged or
                dense decode kernel, flash prefill).
@@ -380,12 +390,17 @@ def resolve_key(
     serving engine uses this to learn which backend is CURRENTLY serving a
     key before demoting it, and (with `shard`) to report per-shard
     resolution in stats."""
-    op, phase_val, bucket, target_name = key.split("|", 3)
-    phase = Phase(phase_val)
+    op = key.split("|", 1)[0]
     if op == ATTN_OP:
-        ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
+        phase_val, bucket, kv, target_name = split_attn_key(key)
+        ladder = _attn_ladder(
+            Phase(phase_val), bucket, kv, target_name, requested, table_path
+        )
     else:
-        ladder = _matmul_ladder(op, phase, bucket, target_name, requested, table_path)
+        op, phase_val, bucket, target_name = key.split("|", 3)
+        ladder = _matmul_ladder(
+            op, Phase(phase_val), bucket, target_name, requested, table_path
+        )
     backend, source = _apply_quarantine(key, ladder, shard)
     return KernelChoice(backend, None, source)
 
@@ -407,12 +422,17 @@ def demote(
     demoting an already-demoted key moves it further down; the bottom rung
     clamps.  Returns the quarantine record the engine surfaces in
     stats["degraded"]."""
-    op, phase_val, bucket, target_name = key.split("|", 3)
-    phase = Phase(phase_val)
+    op = key.split("|", 1)[0]
     if op == ATTN_OP:
-        ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
+        phase_val, bucket, kv, target_name = split_attn_key(key)
+        ladder = _attn_ladder(
+            Phase(phase_val), bucket, kv, target_name, requested, table_path
+        )
     else:
-        ladder = _matmul_ladder(op, phase, bucket, target_name, requested, table_path)
+        op, phase_val, bucket, target_name = key.split("|", 3)
+        ladder = _matmul_ladder(
+            op, Phase(phase_val), bucket, target_name, requested, table_path
+        )
     return _demote_ladder(key, ladder, failing, reason, shard)
 
 
@@ -427,6 +447,10 @@ ATTN_FALLBACK_BACKEND = "xla"
 
 S_BUCKETS = ("s256", "s1k", "s4k", "sbig")
 
+# KV-cache storage layouts forming the third attn-key axis (the canonical
+# tuple lives with the KVLayout codec in core/encoding.py).
+KV_QUANTS = encoding.KV_QUANTS
+
 
 def s_bucket(s: int) -> str:
     """Context-length bucket: the logical KV length the dispatch attends."""
@@ -439,8 +463,33 @@ def s_bucket(s: int) -> str:
     return "sbig"
 
 
-def attn_dispatch_key(phase: Phase, s: int, target_name: str) -> str:
-    return f"{ATTN_OP}|{phase.value}|{s_bucket(s)}|{target_name}"
+def attn_dispatch_key(
+    phase: Phase, s: int, target_name: str, kv: str = "bf16"
+) -> str:
+    """Attention dispatch key.  bf16 emits the legacy 4-segment form
+    (backward-compatible with every checked-in tuned entry and fault
+    pattern); kv8/kv4 insert the kv-quant axis before the target."""
+    if kv in (None, "bf16"):
+        return f"{ATTN_OP}|{phase.value}|{s_bucket(s)}|{target_name}"
+    if kv not in encoding.KV_QUANTS:
+        raise ValueError(
+            f"unknown kv_quant {kv!r}; expected one of {encoding.KV_QUANTS}"
+        )
+    return f"{ATTN_OP}|{phase.value}|{s_bucket(s)}|{kv}|{target_name}"
+
+
+def split_attn_key(key: str) -> tuple[str, str, str, str]:
+    """attn key -> (phase value, S-bucket, kv-quant, target name).  Accepts
+    both the legacy 4-segment form (implied kv=bf16) and the 5-segment
+    kv-quant form."""
+    parts = key.split("|")
+    if parts[0] != ATTN_OP:
+        raise ValueError(f"not an attn key: {key!r}")
+    if len(parts) == 4:
+        return parts[1], parts[2], "bf16", parts[3]
+    if len(parts) == 5 and parts[3] in encoding.KV_QUANTS:
+        return parts[1], parts[2], parts[3], parts[4]
+    raise ValueError(f"malformed attn key: {key!r}")
 
 
 def default_attn_backend(phase: Phase, bucket: str = "") -> str:
@@ -465,9 +514,27 @@ def _attn_tuned_blocks(entry: dict | None) -> tuple[int, ...] | None:
     return None
 
 
+def _attn_tuned_lookup(
+    phase: Phase, bucket: str, kv: str, target_name: str, table_path: str | None
+) -> dict | None:
+    """Tuned entry for an attn key: the exact (possibly 5-segment) key
+    first; a kv-quant key with no entry of its own inherits the legacy bf16
+    entry — blocks are chunk geometry, independent of the streamed dtype,
+    so a fresh kv axis never silently loses the measured chunking."""
+    key = f"{ATTN_OP}|{phase.value}|{bucket}|{target_name}"
+    if kv not in (None, "bf16"):
+        exact = _tuned_entry(
+            f"{ATTN_OP}|{phase.value}|{bucket}|{kv}|{target_name}", table_path
+        )
+        if exact is not None:
+            return exact
+    return _tuned_entry(key, table_path)
+
+
 def _attn_ladder(
     phase: Phase,
     bucket: str,
+    kv: str,
     target_name: str,
     requested: str | None,
     table_path: str | None,
@@ -484,8 +551,7 @@ def _attn_ladder(
         ladder.append((requested, "requested"))
     known_targets = {targets_lib.TPU_V5E.name, targets_lib.RISCV_VLEN256.name}
     if isinstance(phase, Phase) and target_name in known_targets:
-        key = f"{ATTN_OP}|{phase.value}|{bucket}|{target_name}"
-        entry = _tuned_entry(key, table_path)
+        entry = _attn_tuned_lookup(phase, bucket, kv, target_name, table_path)
         if entry is not None and entry.get("backend") in ATTN_BACKENDS:
             ladder.append((entry["backend"], "tuned"))
         ladder.append((default_attn_backend(phase, bucket), "default"))
@@ -502,20 +568,24 @@ def select_attn(
     blocks: tuple[int, ...] | None = None,
     table_path: str | None = None,
     shard: int | None = None,
+    kv: str = "bf16",
 ) -> KernelChoice:
     """Resolve one attention dispatch — the second op class, mirroring
     select(): `requested` is the caller's attn_backend (EncodingConfig /
     serve_llama --attn-backend); "auto"/None defer to tuned table -> static
     policy -> "xla" fallback on unknown targets.  A quarantined key outranks
     everything, including an explicit request; `shard` scopes the lookup as
-    in select()."""
+    in select().  `kv` is the KV-cache storage layout axis: quarantine and
+    tuning are tracked per kv-quant key (a kernel that fails on int4 pages
+    must not quarantine the bf16 path), with tuned blocks inherited from
+    the bf16 entry when the kv-quant key has none of its own."""
     target_name = getattr(target, "name", str(target))
-    key = attn_dispatch_key(phase, s, target_name)
-    entry = _tuned_entry(key, table_path)
+    key = attn_dispatch_key(phase, s, target_name, kv)
+    bucket = s_bucket(s) if isinstance(phase, Phase) else ""
+    entry = _attn_tuned_lookup(phase, bucket, kv, target_name, table_path)
     resolved_blocks = blocks if blocks is not None else _attn_tuned_blocks(entry)
 
-    bucket = s_bucket(s) if isinstance(phase, Phase) else ""
-    ladder = _attn_ladder(phase, bucket, target_name, requested, table_path)
+    ladder = _attn_ladder(phase, bucket, kv, target_name, requested, table_path)
     backend, source = _apply_quarantine(key, ladder, shard)
     if source == "fallback" and quarantine_level(key, shard) == 0:
         resolved_blocks = None

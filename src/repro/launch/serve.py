@@ -38,6 +38,12 @@ def main():
     ap.add_argument("--block-size", type=int, default=16)
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="paged pool size; small values force preemption")
+    ap.add_argument("--kv-quant", default="bf16",
+                    choices=["bf16", "kv8", "kv4"],
+                    help="KV-cache storage layout: raw bf16, int8 + "
+                         "per-page scales (kv8), or packed int4 (kv4; "
+                         "downgrades to kv8 under an xla attention "
+                         "fallback)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step token budget: run the unified mixed "
                          "chunked-prefill + decode scheduler instead of the "
@@ -89,7 +95,14 @@ def main():
     total_new = sum(len(r.generated) for r in done)
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.2f} tok/s decode throughput incl. prefill)")
-    stats = eng.stats
+    # stats_view(): shape-stable schema — attn_backend/degraded are always
+    # {shard -> value} dicts here, whatever the mesh degree.
+    stats = eng.stats_view()
+    backends = stats["attn_backend"]
+    degraded = stats["degraded"]
+    print(f"[serve] kv_quant={stats['kv_quant']} attn_backend="
+          + ",".join(f"{k}:{v}" for k, v in sorted(backends.items()))
+          + f" degraded={sum(len(v) for v in degraded.values())}")
     if stats["cache_mode"] == "paged":
         print(f"[serve] paged: peak_active={stats['peak_active']} "
               f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "

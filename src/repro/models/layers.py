@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import encoding as encoding_lib
 from repro.core import packed
 from repro.core import targets as targets_lib
 from repro.core.encoding import Phase
@@ -396,6 +397,10 @@ def attention_apply(
         assert window == 0, "paged cache excludes sliding-window configs"
         table = cache["table"]
         bs_page = cache["k"].shape[1]
+        # The cache pytree is self-describing: int8 pools are kv8, packed
+        # uint8 pools are kv4 (core/encoding.KVLayout) — jitted model code
+        # never needs the engine config threaded through.
+        layout = encoding_lib.kv_layout_for_storage(cache["k"].dtype)
         posv = jnp.asarray(pos)
         posm = (posv[:, None] if posv.ndim == 1 else posv) + jnp.arange(s)
         posm = jnp.broadcast_to(posm, (b, s))
@@ -405,20 +410,48 @@ def attention_apply(
         blk = jnp.minimum(posm // bs_page, table.shape[1] - 1)
         pg = table[jnp.arange(b)[:, None], blk]  # (B, S)
         off = posm % bs_page
-        k_pool = cache["k"].at[pg, off].set(k)
-        v_pool = cache["v"].at[pg, off].set(v)
+        if layout.quantized:
+            # Quantize on write: the pool only ever holds int storage plus
+            # the per-token scale pages riding at the same page ids.
+            kq, ksc = layout.quantize(k)
+            vq, vsc = layout.quantize(v)
+            k_pool = cache["k"].at[pg, off].set(kq)
+            v_pool = cache["v"].at[pg, off].set(vq)
+            k_scale = cache["k_scale"].at[pg, off].set(ksc)
+            v_scale = cache["v_scale"].at[pg, off].set(vsc)
+        else:
+            k_pool = cache["k"].at[pg, off].set(k)
+            v_pool = cache["v"].at[pg, off].set(v)
+            k_scale = v_scale = None
         choice = registry_lib.select_attn(
             phase=Phase.DECODE, s=table.shape[1] * bs_page, target=enc.target,
-            requested=enc.attn_backend,
+            requested=enc.attn_backend, kv=layout.name,
         )
         if choice.backend == "pallas":
             # Fused paged-decode kernel: K/V pages gathered tile-by-tile
             # INSIDE the dispatch (scalar-prefetched block table), only the
             # slot's live pages streamed — the (B, NB*bs, KV, D) logical
-            # view is never materialized.
+            # view is never materialized.  Quantized layouts stream the
+            # scale pages alongside and dequantize tile-locally in VMEM.
             out = attn_kernels.paged_decode_attention(
                 q, k_pool, v_pool, table, posm[:, 0],
+                k_scale=k_scale, v_scale=v_scale, kv_quant=layout.name,
                 interpret=targets_lib.resolve_interpret(enc.interpret),
+            )
+        elif layout.quantized:
+            # XLA fallback: gather the quantized view AND its scale view,
+            # dequantize, then run the reference decode — the page stream
+            # and the codec stay identical to the kernel path, only the
+            # gather materialization differs.
+            out = attention_decode(
+                q,
+                layout.dequantize(
+                    paged_gather(k_pool, table), paged_gather(k_scale, table)
+                ),
+                layout.dequantize(
+                    paged_gather(v_pool, table), paged_gather(v_scale, table)
+                ),
+                pos=pos, window=0,
             )
         else:
             out = attention_decode(
@@ -426,6 +459,9 @@ def attention_apply(
                 pos=pos, window=0,
             )
         new_cache = {"k": k_pool, "v": v_pool, "table": table}
+        if layout.quantized:
+            new_cache["k_scale"] = k_scale
+            new_cache["v_scale"] = v_scale
     elif phase is Phase.DECODE and cache is not None and kv_src is None:
         s_c = cache["k"].shape[1]
         if pos_vec:
@@ -545,19 +581,37 @@ def attn_cache_init(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
 
 
 def attn_paged_cache_init(
-    cfg: ModelConfig, batch: int, max_seq: int, *, block_size: int, num_pages: int
+    cfg: ModelConfig, batch: int, max_seq: int, *, block_size: int,
+    num_pages: int, kv_quant: str = "bf16",
 ) -> dict:
     """Paged attention cache: a page pool + per-slot block table, replacing
     the dense (batch, max_seq) reservation.  Page 0 is the scratch page idle
-    rows write to (serving/paged.py); tables init to it."""
+    rows write to (serving/paged.py); tables init to it.
+
+    `kv_quant` selects the KVLayout (core/encoding): bf16 keeps today's
+    activation-dtype pools bit-for-bit; kv8/kv4 store int pools (kv4 packs
+    two nibbles per byte along head_dim) plus float32 `k_scale`/`v_scale`
+    SCALE PAGES with the same (num_pages, block) page geometry — one page
+    id addresses a token block's data and its scales together, so
+    alloc/free/COW/rollback in serving/paged.py manage both in lockstep."""
     assert cfg.sliding_window == 0, "paged cache excludes sliding-window configs"
     nb = -(-max_seq // block_size)
-    dt = cfg.activation_dtype
-    return {
-        "k": jnp.zeros((num_pages, block_size, cfg.num_kv_heads, cfg.head_dim), dt),
-        "v": jnp.zeros((num_pages, block_size, cfg.num_kv_heads, cfg.head_dim), dt),
+    layout = encoding_lib.kv_layout(kv_quant)
+    dt = cfg.activation_dtype if not layout.quantized else layout.storage_dtype
+    hd = (
+        cfg.head_dim if not layout.quantized
+        else layout.storage_head_dim(cfg.head_dim)
+    )
+    out = {
+        "k": jnp.zeros((num_pages, block_size, cfg.num_kv_heads, hd), dt),
+        "v": jnp.zeros((num_pages, block_size, cfg.num_kv_heads, hd), dt),
         "table": jnp.zeros((batch, nb), jnp.int32),
     }
+    if layout.quantized:
+        sshape = layout.scale_shape((num_pages, block_size), cfg.num_kv_heads)
+        out["k_scale"] = jnp.zeros(sshape, jnp.float32)
+        out["v_scale"] = jnp.zeros(sshape, jnp.float32)
+    return out
 
 
 # ---------------------------------------------------------------------------

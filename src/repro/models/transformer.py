@@ -103,6 +103,7 @@ def cache_init(
     cache_mode: str = "dense",
     block_size: int = 16,
     num_pages: int | None = None,
+    kv_quant: str = "bf16",
 ) -> dict:
     """Serving caches for every layer.
 
@@ -111,8 +112,15 @@ def cache_init(
     cache_mode="paged": per-layer page pool (num_pages, block_size) + block
     table — attention-only, no sliding window; the engine owns the page
     allocator (serving/paged.py) and threads tables through the cache leaves.
+    kv_quant ("bf16"/"kv8"/"kv4"): the paged pool's KVLayout — quantized
+    layouts add per-page float32 scale leaves next to the int pools
+    (layers.attn_paged_cache_init); dense caches stay bf16 (the engine
+    config downgrades kv_quant for dense mode).
     """
     assert cache_mode in ("dense", "paged"), cache_mode
+    assert cache_mode == "paged" or kv_quant == "bf16", (
+        "quantized KV layouts require the paged cache", cache_mode, kv_quant
+    )
     n_groups, tail = _pattern_layout(cfg)
     if cache_mode == "paged":
         assert all(t == "attn" for t in cfg.block_pattern), (
@@ -125,7 +133,8 @@ def cache_init(
 
         def one(_t):
             return L.attn_paged_cache_init(
-                cfg, batch, max_seq, block_size=block_size, num_pages=num_pages
+                cfg, batch, max_seq, block_size=block_size,
+                num_pages=num_pages, kv_quant=kv_quant,
             )
 
         g = tuple(one(t) for t in cfg.block_pattern)

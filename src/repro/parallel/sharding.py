@@ -185,7 +185,13 @@ def serving_cache_shardings(caches, mesh: Mesh):
         names = _path_names(path)
         leafname = names[-1] if names else ""
         nd = leaf.ndim
-        if leafname in ("k", "v", "cross_k", "cross_v") and nd >= 4:
+        # Quantized-layout scale pages (G?, num_pages, block, KV, 1) carry
+        # their kv-head axis at -2 exactly like the data pages they scale;
+        # they must shard alongside them or a shard would dequantize its
+        # head slice with another shard's magnitudes.
+        if leafname in (
+            "k", "v", "cross_k", "cross_v", "k_scale", "v_scale"
+        ) and nd >= 4:
             spec = P(*([None] * (nd - 2)), "model", None)
         else:
             spec = P(*([None] * nd))

@@ -33,6 +33,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
+from repro.core.encoding import KV_QUANTS
+
 SAMPLE_MODES = ("greedy", "temperature")
 DECODE_MODES = ("vectorized", "grouped")
 CACHE_MODES = ("paged", "dense")
@@ -60,6 +62,13 @@ class EngineConfig:
     cache_mode: str = "paged"
     block_size: int = 16
     pool_pages: int | None = None
+    # KV-cache storage layout: "bf16" (raw), "kv8" (int8 + per-page scales),
+    # "kv4" (packed int4 + per-page scales).  Quantized layouts require the
+    # paged cache (scale pages ride the block table); resolve() downgrades
+    # to bf16 whenever cache_mode lands on dense, and Engine further
+    # downgrades kv4 -> kv8 when the attention backend cannot dequantize
+    # packed nibbles in-kernel (xla/reference fallbacks).
+    kv_quant: str = "bf16"
     sample: str = "greedy"
     seed: int = 0
     spec_decode: bool = False
@@ -96,6 +105,10 @@ class EngineConfig:
         if self.sample not in SAMPLE_MODES:
             raise ValueError(
                 f"sample must be one of {SAMPLE_MODES}, got {self.sample!r}"
+            )
+        if self.kv_quant not in KV_QUANTS:
+            raise ValueError(
+                f"kv_quant must be one of {KV_QUANTS}, got {self.kv_quant!r}"
             )
         if self.slots < 1:
             raise ValueError(f"slots must be >= 1, got {self.slots}")
@@ -191,6 +204,12 @@ class EngineConfig:
                 else "grouped_decode"
             )
             notes.append(f"cache_mode:dense({why})")
+
+        # Quantized KV layouts live in the paged pool (per-page scale
+        # storage rides the block table); the dense cache stays raw bf16.
+        if self.kv_quant != "bf16" and cache_mode != "paged":
+            changes["kv_quant"] = "bf16"
+            notes.append("kv_quant:bf16(dense_cache)")
 
         # Speculation needs greedy-exact acceptance and the masked verify
         # window; sampling has no greedy target, so it switches spec off.

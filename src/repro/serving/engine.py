@@ -68,6 +68,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import encoding as encoding_lib
 from repro.core.encoding import Phase
 from repro.core.packed import EncodingConfig
 from repro.kernels import registry as registry_lib
@@ -558,6 +559,24 @@ class Engine:
             if repl:
                 self.enc = enc = dataclasses.replace(enc, **repl)
         self.enc_downgrades = tuple(enc_downgrades)
+        # kv4 packs two values per byte; only the pallas decode kernels
+        # unpack nibbles tile-locally in VMEM.  Under an xla/reference
+        # attention fallback (including the forced-xla tp path above) the
+        # gather-and-dequant of packed nibbles is not worth the capacity win,
+        # so kv4 rides the kv8 layout there — recorded like any other
+        # resolve()-time downgrade.
+        if (config.kv_quant == "kv4"
+                and getattr(enc, "attn_backend", "xla")
+                in ("xla", "reference")):
+            config = dataclasses.replace(
+                config, kv_quant="kv8",
+                downgrades=config.downgrades + (
+                    f"kv_quant:kv8(attn_backend="
+                    f"{getattr(enc, 'attn_backend', 'xla')})",
+                ),
+            )
+            self.config = config
+        self.kv_quant = config.kv_quant
         self.params = params
         if self.mesh is not None:
             self.params = jax.device_put(
@@ -647,14 +666,18 @@ class Engine:
             # serving/paged.ShardedBlockAllocator).
             self.alloc = (
                 paged_lib.ShardedBlockAllocator(
-                    pool_pages, block_size, shards=self.tp_shards
+                    pool_pages, block_size, shards=self.tp_shards,
+                    kv_quant=self.kv_quant,
                 )
                 if self.tp_shards > 1
-                else paged_lib.BlockAllocator(pool_pages, block_size)
+                else paged_lib.BlockAllocator(
+                    pool_pages, block_size, self.kv_quant
+                )
             )
             self.caches = T.cache_init(
                 cfg, slots, max_seq, cache_mode="paged",
                 block_size=block_size, num_pages=pool_pages,
+                kv_quant=self.kv_quant,
             )
             self.block_table = np.full(
                 (slots, self.num_blocks), paged_lib.SCRATCH_PAGE, np.int32
@@ -795,7 +818,10 @@ class Engine:
             "mixed": self._mixed_m,
         }[kind]
         return (
-            registry_lib.attn_dispatch_key(phase, self._attn_s(phase), target_name),
+            registry_lib.attn_dispatch_key(
+                phase, self._attn_s(phase), target_name,
+                kv=getattr(self, "kv_quant", "bf16"),
+            ),
             registry_lib.dispatch_key(quant, phase, m, target_name),
         )
 
@@ -943,7 +969,12 @@ class Engine:
         layer's cache-poisoning injection (a kernel writing garbage K/V).
         The slot's next logits go non-finite and the guard quarantines it;
         pages are slot-private unless prefix-shared, so co-batched slots
-        only see the poison when they genuinely share the page."""
+        only see the poison when they genuinely share the page.
+
+        Quantized layouts (kv8/kv4) store integer page data, which cannot
+        hold a NaN — the data pages get a saturating garbage sentinel and
+        the float32 scale pages get the NaN, so dequantize (int * NaN
+        scale) still produces the non-finite logits the guard trips on."""
         nan = jnp.nan
         if self.cache_mode == "paged":
             if not self.slot_pages[s]:
@@ -953,9 +984,13 @@ class Engine:
             def one(path, leaf):
                 if str(getattr(path[-1], "key", "")) == "table":
                     return leaf
+                poison = (
+                    jnp.iinfo(leaf.dtype).max
+                    if jnp.issubdtype(leaf.dtype, jnp.integer) else nan
+                )
                 if _batch_axis(path) == 1:
-                    return leaf.at[:, page].set(nan)
-                return leaf.at[page].set(nan)
+                    return leaf.at[:, page].set(poison)
+                return leaf.at[page].set(poison)
 
         else:
             pos = max(int(self.slot_pos[s]) - 1, 0)
@@ -1038,7 +1073,15 @@ class Engine:
     def _scatter_prefill(self, tmp, batch) -> None:
         """Write each admitted request's non-shared prompt blocks from the
         temporary dense prefill cache into their pool pages — one gather +
-        one scatter per cache leaf."""
+        one scatter per cache leaf.
+
+        The temp prefill cache is always raw bf16 (flash prefill computes
+        full-precision K/V); under a quantized layout the block gather is
+        quantized HERE, page-granular, and the per-page scales land in the
+        sibling `k_scale`/`v_scale` leaves at the same page ids.  jax sorts
+        dict keys, so within a layer the `k`/`v` data leaf is always
+        visited before its `{k,v}_scale` leaf — the data visit stashes the
+        computed scales keyed by the scale leaf's path."""
         bs = self.block_size
         ri: list[int] = []
         bi: list[int] = []
@@ -1056,20 +1099,44 @@ class Engine:
         pga = jnp.asarray(pgs, jnp.int32)
         flat, _ = jax.tree_util.tree_flatten_with_path(tmp)
         tmp_by_path = {jax.tree_util.keystr(p): v for p, v in flat}
+        layout = encoding_lib.kv_layout(getattr(self, "kv_quant", "bf16"))
+        pending_scales: dict[str, jax.Array] = {}
 
         def one(path, leaf):
-            if str(getattr(path[-1], "key", "")) == "table":
+            name = str(getattr(path[-1], "key", ""))
+            if name == "table":
                 return leaf
-            part = tmp_by_path[jax.tree_util.keystr(path)]
+            key = jax.tree_util.keystr(path)
+            if name in ("k_scale", "v_scale"):
+                sc = pending_scales.pop(key)
+                if _batch_axis(path) == 1:
+                    return leaf.at[:, pga].set(sc)
+                return leaf.at[pga].set(sc)
+            part = tmp_by_path[key]
             if _batch_axis(path) == 1:  # stacked groups: (G, B, Lp, KV, HD)
                 g, nb, lpad, kvh, hd = part.shape
                 pr = part.reshape(g, nb, lpad // bs, bs, kvh, hd)
-                return leaf.at[:, pga].set(pr[:, ria, bia])
+                blocks = pr[:, ria, bia]
+                if layout.quantized:
+                    blocks, sc = layout.quantize(blocks)
+                    pending_scales[
+                        key.replace(f"['{name}']", f"['{name}_scale']")
+                    ] = sc
+                return leaf.at[:, pga].set(blocks)
             nb, lpad, kvh, hd = part.shape
             pr = part.reshape(nb, lpad // bs, bs, kvh, hd)
-            return leaf.at[pga].set(pr[ria, bia])
+            blocks = pr[ria, bia]
+            if layout.quantized:
+                blocks, sc = layout.quantize(blocks)
+                pending_scales[
+                    key.replace(f"['{name}']", f"['{name}_scale']")
+                ] = sc
+            return leaf.at[pga].set(blocks)
 
         self.caches = jax.tree_util.tree_map_with_path(one, self.caches)
+        assert not pending_scales, (
+            f"scale pages never scattered: {sorted(pending_scales)}"
+        )
 
     def _live_table_width(self) -> int:
         """Logical block-table width the NEXT decode dispatch needs: the max
@@ -1177,6 +1244,9 @@ class Engine:
             "cache_mode": self.cache_mode,
             "decode_mode": self.decode_mode,
             "sample": self.sample,
+            # KV-cache storage layout (core/encoding.kv_layout): bf16, or a
+            # quantized paged layout (kv8/kv4) with per-page scales.
+            "kv_quant": getattr(self, "kv_quant", "bf16"),
             # Serving weight format (drives the decode weight-stream roofline;
             # see encoding.quant_weight_stream_bytes and docs/PERF.md).
             "weight_quant": self.enc.weight_quant,
@@ -1196,6 +1266,7 @@ class Engine:
                 ),
                 target=self.enc.target,
                 requested=getattr(self.enc, "attn_backend", "xla"),
+                kv=getattr(self, "kv_quant", "bf16"),
             ).backend,
             # ---- robustness observables (docs/ROBUSTNESS.md) ---------------
             "steps": self.step_count,
@@ -1225,6 +1296,7 @@ class Engine:
                     s=attn_s,
                     target=self.enc.target,
                     requested=getattr(self.enc, "attn_backend", "xla"),
+                    kv=getattr(self, "kv_quant", "bf16"),
                     shard=k,
                 ).backend
                 for k in range(self.tp_shards)
@@ -1269,6 +1341,22 @@ class Engine:
             )
             if self.tp_shards > 1:
                 out["tp"]["per_shard_pages"] = self.alloc.per_shard_stats()
+        return out
+
+    def stats_view(self) -> dict:
+        """`stats` with a SHAPE-STABLE schema across tp degrees.
+
+        The raw `stats` property keeps its legacy forms — a scalar
+        `attn_backend` string and a flat `degraded` list at tp==1, per-shard
+        dicts at tp>1 — because both shapes are pinned by existing callers
+        and tests.  Reporting code that must not care about the mesh (e.g.
+        launch/serve.py) uses this accessor instead: `attn_backend` and
+        `degraded` are ALWAYS {shard -> value} dicts, with the single-device
+        engine presented as shard 0."""
+        out = self.stats
+        if self.tp_shards == 1:
+            out["attn_backend"] = {0: out["attn_backend"]}
+            out["degraded"] = {0: out["degraded"]}
         return out
 
     def audit(self) -> None:

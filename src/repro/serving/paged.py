@@ -72,13 +72,15 @@ class PagePlan:
 class BlockAllocator:
     """Fixed pool of `num_pages` pages of `block_size` tokens (page 0 scratch)."""
 
-    def __init__(self, num_pages: int, block_size: int):
+    def __init__(self, num_pages: int, block_size: int,
+                 kv_quant: str = "bf16"):
         assert num_pages >= 2, "need at least one allocatable page + scratch"
         assert block_size > 0 and (block_size & (block_size - 1)) == 0, (
             "block_size must be a power of two (prefill pads to block multiples)"
         )
         self.num_pages = num_pages
         self.block_size = block_size
+        self.kv_quant = kv_quant
         # LIFO free list: lowest page ids first, scratch excluded.
         self.free: list[int] = list(range(num_pages - 1, SCRATCH_PAGE, -1))
         self.refcount = np.zeros(num_pages, np.int32)
@@ -87,10 +89,19 @@ class BlockAllocator:
         # Last slot the engine charged each live page to (diagnostics only:
         # AllocatorInvariantError names it; shared pages keep the first owner).
         self.page_owner: dict[int, int] = {}
+        # Pages whose per-page dequant scales are live (kv8/kv4 layouts only).
+        # Scale pages live at the SAME page ids as their data pages, so this
+        # set must track the allocated set in lockstep: a page handed out
+        # without scale state would dequantize someone else's magnitudes.
+        self.scale_live: set[int] = set()
         self.stats = {
             "allocs": 0, "frees": 0, "shared_hits": 0, "cow_events": 0,
             "peak_in_use": 0,
         }
+
+    @property
+    def _quantized(self) -> bool:
+        return self.kv_quant != "bf16"
 
     # -- capacity ------------------------------------------------------------
 
@@ -120,6 +131,8 @@ class BlockAllocator:
                 owner=self.page_owner.get(page),
             )
         self.refcount[page] = 1
+        if self._quantized:
+            self.scale_live.add(page)
         if owner is not None:
             self.page_owner[page] = owner
         self.stats["allocs"] += 1
@@ -130,6 +143,11 @@ class BlockAllocator:
         if self.refcount[page] <= 0:
             raise AllocatorInvariantError(
                 "sharing unreferenced page", page=page,
+                owner=self.page_owner.get(page),
+            )
+        if self._quantized and page not in self.scale_live:
+            raise AllocatorInvariantError(
+                "sharing a page without live scale state", page=page,
                 owner=self.page_owner.get(page),
             )
         self.refcount[page] += 1
@@ -155,6 +173,7 @@ class BlockAllocator:
             if key is not None and self.registry.get(key) == page:
                 del self.registry[key]
             self.page_owner.pop(page, None)
+            self.scale_live.discard(page)
             self.free.append(page)
             self.stats["frees"] += 1
 
@@ -239,7 +258,11 @@ class BlockAllocator:
           * the token-prefix registry holds no refs to freed pages (a stale
             registry entry would hand a future prompt a recycled page whose
             K/V belongs to someone else — silent cross-request corruption),
-          * free + in-use partitions the pool (scratch excluded)."""
+          * free + in-use partitions the pool (scratch excluded),
+          * under a quantized layout (kv8/kv4), scale state exactly tracks
+            the allocated set: every referenced page has live scales, no
+            free page does (spec-decode rollback and COW must free/copy
+            scale pages in lockstep with their data pages)."""
         refs: dict[int, int] = {}
         for table in tables_in_use:
             for p in table:
@@ -275,6 +298,19 @@ class BlockAllocator:
             assert self.page_key.get(p) == key, (
                 f"registry/page_key disagree for page {p}"
             )
+        if self._quantized:
+            for p in refs:
+                if p not in self.scale_live:
+                    raise AllocatorInvariantError(
+                        "referenced page lacks live scale state", page=p,
+                        owner=self.page_owner.get(p),
+                    )
+            for p in self.scale_live:
+                if p in free_set or self.refcount[p] <= 0:
+                    raise AllocatorInvariantError(
+                        "freed page still holds scale state", page=p,
+                        owner=self.page_owner.get(p),
+                    )
 
 
 class ShardedBlockAllocator:
@@ -299,12 +335,14 @@ class ShardedBlockAllocator:
     keeps exactly one host block table.  The interface mirrors
     BlockAllocator, so Engine code is allocator-agnostic."""
 
-    def __init__(self, num_pages: int, block_size: int, *, shards: int):
+    def __init__(self, num_pages: int, block_size: int, *, shards: int,
+                 kv_quant: str = "bf16"):
         assert shards >= 1, shards
-        self.shards = [BlockAllocator(num_pages, block_size)
+        self.shards = [BlockAllocator(num_pages, block_size, kv_quant)
                        for _ in range(shards)]
         self.num_pages = num_pages
         self.block_size = block_size
+        self.kv_quant = kv_quant
 
     @property
     def _p(self) -> BlockAllocator:

@@ -403,6 +403,44 @@ def test_poisoned_kv_trips_guard_next_step():
     assert eng.alloc.in_use() == 0
 
 
+def test_poisoned_kv_quantized_pages_isolated_to_slot():
+    """nonfinite_kv under the kv8 layout: integer data pages cannot hold a
+    NaN, so the injection saturates them AND NaNs the float32 scale pages —
+    dequantize still goes non-finite, the guard still trips, and it
+    quarantines ONLY the offending slot.  Co-batched survivors must stay
+    token-identical to the fault-free kv8 run (their pages are private;
+    the poison cannot leak through the shared pool)."""
+    prompts = _prompts(n=3)
+    gold = {r.uid: list(r.generated)
+            for r in _drive_to_finish(_engine(prompts=prompts, kv_quant="kv8"))}
+    sched = faults_lib.FaultSchedule(
+        [faults_lib.Fault(3, "nonfinite_kv", uid=0)], seed=0)
+    eng = _engine(sched, prompts=prompts, kv_quant="kv8")
+    _drive(eng, sched)
+    assert eng.stats["kv_quant"] == "kv8"
+    by_uid = {r.uid: r for r in eng.finished}
+    assert by_uid[0].status == "error"
+    assert eng.stats["lifecycle"]["guard_trips"] >= 1
+    for uid in (1, 2):
+        assert by_uid[uid].status == "ok", by_uid[uid].error
+        assert list(by_uid[uid].generated) == gold[uid], (
+            f"survivor uid {uid} diverged under kv8 poison"
+        )
+    assert eng.alloc.in_use() == 0
+    assert not eng.alloc.scale_live  # scale state freed in lockstep
+
+
+def test_chaos_conformance_kv8():
+    """The full conformance contract (terminal statuses, survivor token
+    identity, zero leaked pages + zero leaked scale state, quarantine audit
+    trail) holds with the quantized layout, replaying the committed
+    kv-quant schedule."""
+    path = os.path.join(SCHEDULE_DIR, "kv_quant_mix.json")
+    eng, _ = _conformance(path, kv_quant="kv8")
+    assert eng.stats["kv_quant"] == "kv8"
+    assert not eng.alloc.scale_live
+
+
 # ---------------------------------------------------------------------------
 # Typed allocator invariants (satellite b)
 # ---------------------------------------------------------------------------

@@ -12,6 +12,7 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import jax.numpy as jnp  # noqa: E402
 
+from repro.core import encoding as encoding_lib  # noqa: E402
 from repro.core.encoding import Phase  # noqa: E402
 from repro.kernels import attn as attn_lib  # noqa: E402
 from repro.kernels import ops, ref  # noqa: E402
@@ -157,3 +158,141 @@ def test_paged_gather_bound_is_prefix_of_full_gather(b, nb, bs, nb_bound, seed):
     eff = min(nb_bound, nb)
     assert got.shape[1] == eff * bs
     np.testing.assert_array_equal(np.asarray(got), np.asarray(full[:, : eff * bs]))
+
+
+# ---- KVLayout codec (core/encoding.py kv8/kv4) -----------------------------
+
+
+@settings(**_SETTINGS)
+@given(
+    name=st.sampled_from(["kv8", "kv4"]),
+    bs=st.sampled_from([2, 4, 8]),
+    kv=st.integers(1, 3),
+    hd=st.sampled_from([2, 4, 8, 16]),
+    scale_pow=st.integers(-6, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kv_layout_roundtrip_error_bound(name, bs, kv, hd, scale_pow, seed):
+    """pack -> unpack stays within half a quantization step of the input,
+    per (token, head) row, at ANY magnitude: the per-row absmax scale makes
+    the codec exact up to |x|_max / (2 * qmax) + rounding slack."""
+    layout = encoding_lib.kv_layout(name)
+    rng = np.random.RandomState(seed)
+    x = (2.0 ** scale_pow) * rng.randn(bs, kv, hd).astype(np.float32)
+    q, scale = layout.quantize(jnp.asarray(x))
+    assert q.dtype == layout.storage_dtype
+    assert q.shape[-1] == layout.storage_head_dim(hd)
+    assert scale.shape == (bs, kv, 1)
+    deq = np.asarray(layout.dequantize(q, scale))
+    assert deq.shape == x.shape
+    amax = np.abs(x).max(axis=-1, keepdims=True)
+    # Half a step per row, plus float slack for the scale multiply.
+    bound = amax / (2.0 * layout.qmax) + 1e-6 * np.maximum(amax, 1.0)
+    assert np.all(np.abs(deq - x) <= bound + 1e-12)
+
+
+@settings(**_SETTINGS)
+@given(
+    name=st.sampled_from(["kv8", "kv4"]),
+    bs=st.sampled_from([4, 8]),
+    tail=st.integers(1, 7),
+    kv=st.integers(1, 2),
+    hd=st.sampled_from([4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kv_layout_ragged_tail_rows_independent(name, bs, tail, kv, hd, seed):
+    """A ragged last page (only `tail` of `bs` token rows written) decodes
+    its written rows identically to a full page holding the same values:
+    scales are per (token, head) row, so garbage/zero tail rows can never
+    perturb real rows."""
+    tail = min(tail, bs)
+    layout = encoding_lib.kv_layout(name)
+    rng = np.random.RandomState(seed)
+    full = rng.randn(bs, kv, hd).astype(np.float32)
+    ragged = full.copy()
+    ragged[tail:] = 0.0  # unwritten tail rows (zeros, as cache_init leaves)
+    qf, sf = layout.quantize(jnp.asarray(full))
+    qr, sr = layout.quantize(jnp.asarray(ragged))
+    np.testing.assert_array_equal(np.asarray(qf)[:tail], np.asarray(qr)[:tail])
+    np.testing.assert_array_equal(np.asarray(sf)[:tail], np.asarray(sr)[:tail])
+    deq_f = np.asarray(layout.dequantize(qf, sf))
+    deq_r = np.asarray(layout.dequantize(qr, sr))
+    np.testing.assert_array_equal(deq_f[:tail], deq_r[:tail])
+    np.testing.assert_array_equal(deq_r[tail:], np.zeros_like(deq_r[tail:]))
+
+
+@settings(**_SETTINGS)
+@given(
+    name=st.sampled_from(["kv8", "kv4"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kv_layout_requantize_idempotent(name, seed):
+    """Re-quantizing a dequantized page is a fixed point: quantize(deq(q, s))
+    returns the same codes bit-for-bit (the absmax row survives the round
+    trip, so the recovered scale matches and every code re-rounds to
+    itself)."""
+    layout = encoding_lib.kv_layout(name)
+    rng = np.random.RandomState(seed)
+    x = rng.randn(4, 2, 8).astype(np.float32)
+    q, s = layout.quantize(jnp.asarray(x))
+    deq = layout.dequantize(q, s)
+    q2, s2 = layout.quantize(deq)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s2), rtol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    nb=st.integers(1, 4),
+    bs=st.sampled_from([2, 4, 8]),
+    kv=st.integers(1, 2),
+    g=st.sampled_from([1, 2]),
+    lq=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_paged_kernel_bit_consistent_with_dense_kernel_kv8(
+    b, nb, bs, kv, g, lq, seed
+):
+    """The kv8 paged-decode kernel (scale pages ride the block table, tiles
+    dequantized in VMEM) is BITWISE the kv8 dense-decode kernel on the
+    gathered quantized view at matched streaming granularity — the same
+    contract the bf16 kernels pin above, extended to the quantized layout."""
+    if lq > nb * bs:
+        lq = 1
+    layout = encoding_lib.kv_layout("kv8")
+    rng = np.random.RandomState(seed)
+    d, h = 8, kv * g
+    k_raw = jnp.asarray(rng.randn(1 + b * nb, bs, kv, d), np.float32)
+    v_raw = jnp.asarray(rng.randn(1 + b * nb, bs, kv, d), np.float32)
+    pool_k, ks = layout.quantize(k_raw)
+    pool_v, vs = layout.quantize(v_raw)
+    table = jnp.asarray(
+        (1 + rng.permutation(b * nb).reshape(b, nb)).astype(np.int32)
+    )
+    q = jnp.asarray(rng.randn(b, lq, h, d), np.float32)
+    pos = jnp.asarray(rng.randint(0, nb * bs - lq + 1, b), jnp.int32)
+
+    paged = attn_lib.paged_decode_attention(
+        q, pool_k, pool_v, table, pos,
+        k_scale=ks, v_scale=vs, kv_quant="kv8", interpret=True,
+    )
+    dense = attn_lib.dense_decode_attention(
+        q, L.paged_gather(pool_k, table), L.paged_gather(pool_v, table),
+        pos, window=0, kv_chunk=bs,
+        k_scale=L.paged_gather(ks, table), v_scale=L.paged_gather(vs, table),
+        kv_quant="kv8", interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(paged), np.asarray(dense))
+    # Both agree with the jnp reference run on the dequantized view.
+    want = L.attention_decode(
+        q,
+        layout.dequantize(L.paged_gather(pool_k, table),
+                          L.paged_gather(ks, table)),
+        layout.dequantize(L.paged_gather(pool_v, table),
+                          L.paged_gather(vs, table)),
+        pos=pos, window=0,
+    )
+    np.testing.assert_allclose(
+        np.asarray(paged), np.asarray(want), rtol=2e-5, atol=2e-5
+    )

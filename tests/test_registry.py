@@ -138,14 +138,19 @@ def test_checked_in_table_is_loadable_and_typed():
     assert table["entries"], "checked-in tuned table should not be empty"
     seen_attn = 0
     for key, entry in table["entries"].items():
-        head, phase, bucket, target = key.split("|")
+        head = key.split("|", 1)[0]
         b = entry["blocks"]
         if head == registry.ATTN_OP:
+            # Attn keys are 4-part (legacy, implied bf16) or 5-part (with
+            # the kv-quant axis); split_attn_key validates either form.
             seen_attn += 1
+            _phase, bucket, kv, _target = registry.split_attn_key(key)
             assert bucket in registry.S_BUCKETS, key
+            assert kv in registry.KV_QUANTS, key
             assert entry["backend"] in registry.ATTN_BACKENDS, key
             assert len(b) == 2 and all(isinstance(v, int) and v >= 1 for v in b), key
         else:
+            head, phase, bucket, target = key.split("|")
             assert head in registry.QUANTS, key
             assert bucket in registry.M_BUCKETS, key
             assert entry["backend"] in registry.BACKENDS_BY_QUANT[head], key
@@ -260,6 +265,82 @@ def test_attn_unknown_target_falls_back_to_xla(tmp_path):
         phase=Phase.DECODE, s=512, target=alien, table_path=empty
     )
     assert choice.backend == "xla" and choice.source == "fallback"
+
+
+def test_attn_key_kv_axis_forms():
+    """bf16 keys keep the legacy 4-segment form; kv8/kv4 insert the kv axis
+    before the target.  split_attn_key inverts both and rejects junk."""
+    k_bf16 = registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e")
+    assert k_bf16 == "attn|decode|s1k|tpu-v5e"
+    assert registry.split_attn_key(k_bf16) == ("decode", "s1k", "bf16", "tpu-v5e")
+    k8 = registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e", kv="kv8")
+    assert k8 == "attn|decode|s1k|kv8|tpu-v5e"
+    assert registry.split_attn_key(k8) == ("decode", "s1k", "kv8", "tpu-v5e")
+    assert registry.attn_dispatch_key(
+        Phase.PREFILL, 64, "tpu-v5e", kv="bf16"
+    ) == "attn|prefill|s256|tpu-v5e"
+    with pytest.raises(ValueError):
+        registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e", kv="kv2")
+    with pytest.raises(ValueError, match="malformed attn key"):
+        registry.split_attn_key("attn|decode|s1k|not-a-kv|x|y")
+    with pytest.raises(ValueError):
+        registry.split_attn_key("none|decode|m8|tpu-v5e")
+
+
+def test_attn_kv_key_inherits_bf16_tuned_blocks(tmp_path):
+    """A kv8/kv4 key with no tuned entry of its own falls back to the
+    legacy bf16 entry's blocks (chunk geometry is dtype-independent), while
+    an exact 5-part entry outranks the inherited one."""
+    path = str(tmp_path / "table.json")
+    key_bf16 = registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e")
+    registry.save_table(
+        {"entries": {key_bf16: {"backend": "pallas", "blocks": [1, 64]}}},
+        path,
+    )
+    choice = registry.select_attn(
+        phase=Phase.DECODE, s=512, kv="kv8", table_path=path
+    )
+    assert choice.source == "tuned" and choice.blocks == (1, 64)
+    # Exact kv-specific entry wins over the inherited bf16 one.
+    key_kv8 = registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e", kv="kv8")
+    registry.save_table(
+        {"entries": {
+            key_bf16: {"backend": "pallas", "blocks": [1, 64]},
+            key_kv8: {"backend": "xla", "blocks": [1, 32]},
+        }},
+        path,
+    )
+    registry.clear_cache()
+    choice = registry.select_attn(
+        phase=Phase.DECODE, s=512, kv="kv8", table_path=path
+    )
+    assert choice.backend == "xla" and choice.blocks == (1, 32)
+    # The bf16 resolution is untouched by the kv8 entry.
+    choice = registry.select_attn(phase=Phase.DECODE, s=512, table_path=path)
+    assert choice.backend == "pallas" and choice.blocks == (1, 64)
+
+
+def test_attn_kv_key_quarantine_is_per_layout(tmp_path):
+    """Demoting the kv8 decode key must not quarantine the bf16 path (and
+    vice versa): a kernel failing on int8 pages stays available for raw
+    bf16 serving."""
+    empty = str(tmp_path / "empty.json")
+    registry.save_table({"entries": {}}, empty)
+    key8 = registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e", kv="kv8")
+    before = registry.resolve_key(key8, table_path=empty)
+    assert before.backend == "pallas"
+    record = registry.demote(key8, failing="pallas", reason="test")
+    try:
+        assert record["to"] == "xla"
+        after = registry.resolve_key(key8, table_path=empty)
+        assert after.backend == "xla"
+        bf16 = registry.resolve_key(
+            registry.attn_dispatch_key(Phase.DECODE, 512, "tpu-v5e"),
+            table_path=empty,
+        )
+        assert bf16.backend == "pallas"  # untouched
+    finally:
+        registry.clear_quarantine()
 
 
 def test_attn_checked_in_table_covers_serving_buckets():

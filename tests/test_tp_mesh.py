@@ -181,14 +181,22 @@ _TP_IDENTITY_SCRIPT = textwrap.dedent(_ENV_HEADER + """
                       spec_decode=True, draft_k=3)),
         ("budget", dict(slots=2, max_seq=64, cache_mode="paged", block_size=8,
                         token_budget=16)),
+        # Quantized paged KV: scale pages shard alongside their KV pages
+        # (parallel/sharding.serving_cache_shardings); the xla attention
+        # fallback dequantizes identically at every mesh degree, so kv8
+        # serving must stay token-identical to its own mesh=1 run.
+        ("kv8", dict(slots=2, max_seq=64, cache_mode="paged", block_size=8,
+                     kv_quant="kv8")),
     ]
     for name, kw in MATRIX:
-        base, _ = run(1, prompts=PROMPTS, **kw)
+        base, beng = run(1, prompts=PROMPTS, **kw)
         for shards in (2, 4):
             got, eng = run(shards, prompts=PROMPTS, **kw)
             assert got == base, (name, shards, base, got)
             assert eng.tp_shards == shards
             assert eng.stats["tp"]["shards"] == shards
+            if name == "kv8":
+                assert eng.stats["kv_quant"] == "kv8"
         print("IDENT_OK", name)
     print("TP_IDENTITY_OK")
 """)
