@@ -87,6 +87,15 @@ CHECKS = [
     ("BENCH_paged.json", "paged.shared_hits", "baseline_frac", 0.99),
     ("BENCH_paged.json", "paged.pool_utilization_peak", "baseline_frac", 0.99),
     ("BENCH_paged.json", "paged.tok_s", "baseline_frac", 0.2),
+    # -- radix-tree prefix cache: the multi-tenant trace acceptance bar.
+    #    Block-level LCP hit rate must not regress (and the committed
+    #    baseline itself clears 0.5 where the old exact-whole-prefix
+    #    matcher scores < 0.1), outputs must be token-identical cache
+    #    on/off/dense, and the eviction-pressure leg must drain leak-free --
+    ("BENCH_paged.json", "prefix_cache.hit_rate", "baseline_frac", 0.99),
+    ("BENCH_paged.json", "prefix_cache.token_identical", "min_abs", 1.0),
+    ("BENCH_paged.json", "prefix_cache.pages_leaked", "max_abs", 0.0),
+    ("BENCH_paged.json", "prefix_cache.quota_violations", "max_abs", 0.0),
 ]
 
 

@@ -1045,6 +1045,181 @@ def paged_cache_bench(
     return rows
 
 
+def prefix_cache_bench(
+    arch: str = "qwen2-1.5b",
+    *,
+    quick: bool = False,
+    out_json: str = "BENCH_paged.json",
+):
+    """Radix-tree prefix cache (docs/PERF.md §Prefix caching) on a
+    multi-tenant trace: 3 tenants, each with its own shared system prompt
+    and a zipf-reused template library, plus a unique per-request tail.
+
+      hit_rate        — block-level LCP hits / looked-up immutable blocks;
+                        the radix tree must clear 0.5 on a trace where the
+                        old exact-whole-prefix matcher (computed here as an
+                        analytic oracle) scores < 0.1.
+      token_identical — the same trace replayed cache-on / cache-off /
+                        dense must generate identical tokens per request.
+      pressure leg    — a small pool re-serves the trace so cumulative
+                        demand fills it >= 3x: evictions must fire, audit()
+                        stays exact every step, nothing leaks, and (with a
+                        tenant_quota) no tenant's charged usage exceeds the
+                        quota while another tenant has queued work.
+
+    Merges a "prefix_cache" section into BENCH_paged.json and returns CSV
+    rows; check_regression.py gates hit_rate, token_identical and
+    pages_leaked."""
+    cfg = registry.get_reduced(arch)
+    enc = EncodingConfig(enabled=True, backend="xla")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
+
+    max_seq = 96
+    block_size = 8
+    n_tenants = 3
+    per_tenant = 4 if quick else 8
+    max_new = 4 if quick else 8
+
+    rng = np.random.RandomState(0)
+    system = {t: rng.randint(1, cfg.vocab_size, 24).astype(np.int32)
+              for t in range(n_tenants)}        # 3 full blocks each
+    templates = {t: [rng.randint(1, cfg.vocab_size,
+                                 8 * (1 + k % 2)).astype(np.int32)
+                     for k in range(3)]
+                 for t in range(n_tenants)}
+    zipf = np.array([1.0, 0.5 ** 1.5, 1.0 / 3 ** 1.5])
+    zipf /= zipf.sum()
+
+    def trace():
+        """The seeded multi-tenant request stream (tenants interleaved)."""
+        r = np.random.RandomState(42)
+        reqs = []
+        for i in range(n_tenants * per_tenant):
+            t = i % n_tenants
+            tmpl = templates[t][int(r.choice(3, p=zipf))]
+            tail = r.randint(1, cfg.vocab_size,
+                             int(r.randint(8, 13))).astype(np.int32)
+            reqs.append(engine_lib.Request(
+                uid=i, max_new_tokens=max_new, tenant=f"tenant-{t}",
+                prompt=np.concatenate([system[t], tmpl, tail]),
+            ))
+        return reqs
+
+    # Analytic oracle for the OLD exact-whole-prefix matcher: a request's
+    # immutable run hits only when that ENTIRE run was registered before.
+    seen: set = set()
+    exact_hits = exact_lookups = 0
+    for req in trace():
+        nshare = max(0, (len(req.prompt) - 1) // block_size)
+        whole = tuple(int(x) for x in req.prompt[: nshare * block_size])
+        if nshare:
+            exact_lookups += nshare
+            if whole in seen:
+                exact_hits += nshare
+            seen.add(whole)
+    exact_whole_prefix_rate = exact_hits / max(1, exact_lookups)
+
+    def run(**kw):
+        eng = engine_lib.Engine(
+            params, cfg, enc, slots=4, max_seq=max_seq,
+            block_size=block_size, **kw,
+        )
+        quota = kw.get("tenant_quota")
+        quota_violations = 0
+        steps = 0
+        for req in trace():
+            assert eng.submit(req), f"uid {req.uid} rejected"
+        while eng.queue or any(r is not None for r in eng.slot_req):
+            eng.step()
+            steps += 1
+            assert steps < 5000
+            if kw.get("cache_mode", "paged") == "paged":
+                eng.audit()
+                if quota is not None and eng.queue:
+                    usage = eng.alloc.tenant_usage()
+                    if any(u > quota + 1e-9 for u in usage.values()):
+                        quota_violations += 1
+        assert all(r.status == "ok" for r in eng.finished)
+        toks = {r.uid: list(r.generated) for r in eng.finished}
+        return eng, toks, quota_violations
+
+    eng_on, gold, _ = run(cache_mode="paged", prefix_cache=True)
+    pc = eng_on.stats["prefix_cache"]
+    hit_rate = pc["hit_rate"]
+    # The tentpole's acceptance bar, self-enforcing: LCP matching must clear
+    # 0.5 on a trace where exact-whole-prefix matching is near-useless.
+    assert hit_rate >= 0.5, f"radix hit rate {hit_rate:.3f} < 0.5"
+    assert exact_whole_prefix_rate < 0.1, (
+        f"trace too easy: exact matcher scores {exact_whole_prefix_rate:.3f}"
+    )
+
+    _, toks_off, _ = run(cache_mode="paged", prefix_cache=False)
+    _, toks_dense, _ = run(cache_mode="dense")
+    token_identical = 1.0 if (toks_off == gold and toks_dense == gold) else 0.0
+
+    # Eviction-pressure leg: a pool several times smaller than the trace's
+    # cumulative page demand, with a per-tenant quota.  Every step audits.
+    pool_pages = 12 if quick else 18
+    quota = 10
+    eng_pr, toks_pr, violations = run(
+        cache_mode="paged", prefix_cache=True, pool_pages=pool_pages,
+        tenant_quota=quota, token_budget=32,
+    )
+    pr = eng_pr.stats
+    fill_factor = pr["allocs"] / eng_pr.alloc.capacity
+    assert fill_factor >= 3.0, (
+        f"pressure leg refilled the pool only {fill_factor:.1f}x"
+    )
+    pages_leaked = float(eng_pr.alloc.in_use())
+    eng_pr.audit()
+
+    section = {
+        "trace": {
+            "tenants": n_tenants, "requests": n_tenants * per_tenant,
+            "block_size": block_size,
+            "note": "shared 16-token system prompt per tenant + zipf "
+                    "template reuse + unique tails",
+        },
+        "hit_rate": hit_rate,
+        "hit_blocks": pc["hit_blocks"],
+        "hit_tokens": pc["hit_tokens"],
+        "lookup_blocks": pc["lookup_blocks"],
+        "exact_whole_prefix_rate": exact_whole_prefix_rate,
+        "token_identical": token_identical,
+        "pressure": {
+            "pool_pages": pool_pages,
+            "fill_factor": fill_factor,
+            "evictions": pr["prefix_cache"]["evictions"],
+            "deferred_hits": pr["prefix_cache"]["deferred_hits"],
+            "cached_pages": pr["prefix_cache"]["cached_pages"],
+            "preemptions": pr["preemptions"],
+            "tenant_quota": quota,
+            "quota_violations": violations,
+            "token_identical": 1.0 if toks_pr == gold else 0.0,
+        },
+        "pages_leaked": pages_leaked,
+        "quota_violations": float(violations),
+    }
+    try:
+        with open(out_json) as f:
+            result = json.load(f)
+    except (OSError, ValueError):
+        result = {}
+    result["prefix_cache"] = section
+    with open(out_json, "w") as f:
+        json.dump(result, f, indent=2)
+    return [
+        ("prefix_cache/hit_rate", hit_rate),
+        ("prefix_cache/exact_whole_prefix_rate", exact_whole_prefix_rate),
+        ("prefix_cache/hit_tokens", pc["hit_tokens"]),
+        ("prefix_cache/token_identical", token_identical),
+        ("prefix_cache/evictions", section["pressure"]["evictions"]),
+        ("prefix_cache/deferred_hits", section["pressure"]["deferred_hits"]),
+        ("prefix_cache/quota_violations", float(violations)),
+        ("prefix_cache/pages_leaked", pages_leaked),
+    ]
+
+
 def kv_quant_bench(
     arch: str = "qwen2-1.5b",
     *,
@@ -1263,6 +1438,8 @@ def main(*, quick: bool = False):
     for name, val in tp_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")
     for name, val in paged_cache_bench(quick=quick):
+        print(f"{name},{val:.4f},see-BENCH_paged.json")
+    for name, val in prefix_cache_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_paged.json")
     for name, val in kv_quant_bench(quick=quick):
         print(f"{name},{val:.4f},see-BENCH_decode.json")

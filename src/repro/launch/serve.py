@@ -44,6 +44,20 @@ def main():
                          "per-page scales (kv8), or packed int4 (kv4; "
                          "downgrades to kv8 under an xla attention "
                          "fallback)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="radix-tree prefix cache: park finished requests' "
+                         "full KV blocks for cross-request longest-common-"
+                         "prefix reuse (--no-prefix-cache disables; paged "
+                         "cache only)")
+    ap.add_argument("--tenant-quota", dest="tenant_quota", type=int,
+                    default=None,
+                    help="per-tenant page quota (pages): cap any one "
+                         "tenant's worst-case page reservation so it "
+                         "cannot starve the pool")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="number of synthetic tenants; requests are "
+                         "assigned round-robin (tenant-0, tenant-1, ...)")
     ap.add_argument("--token-budget", type=int, default=None,
                     help="per-step token budget: run the unified mixed "
                          "chunked-prefill + decode scheduler instead of the "
@@ -89,6 +103,7 @@ def main():
         eng.submit(engine_lib.Request(
             uid=i, prompt=prompt, max_new_tokens=args.max_new,
             slo_class=args.slo_class,
+            tenant=f"tenant-{i % max(1, args.tenants)}",
         ))
     done = eng.run()
     dt = time.time() - t0
@@ -107,6 +122,17 @@ def main():
         print(f"[serve] paged: peak_active={stats['peak_active']} "
               f"pages={stats['pages_total']} peak_in_use={stats['peak_in_use']} "
               f"shared_hits={stats['shared_hits']} preemptions={stats['preemptions']}")
+        pc = stats["prefix_cache"]
+        line = (f"[serve] prefix_cache: enabled={pc['enabled']} "
+                f"hit_rate={pc['hit_rate']:.3f} hit_tokens={pc['hit_tokens']} "
+                f"cached_pages={pc['cached_pages']} evictions={pc['evictions']} "
+                f"deferred_hits={pc['deferred_hits']}")
+        if pc.get("tenant_quota") is not None:
+            usage = pc.get("tenant_usage", {})
+            line += (f" tenant_quota={pc['tenant_quota']} tenants="
+                     + ",".join(f"{t}:{u:.1f}"
+                                for t, u in sorted(usage.items())))
+        print(line)
     if "continuous" in stats:
         c = stats["continuous"]
         print(f"[serve] continuous: budget={c['token_budget']} "

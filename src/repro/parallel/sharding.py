@@ -179,7 +179,17 @@ def serving_cache_shardings(caches, mesh: Mesh):
     `sanitize` drops the axis when kv_heads doesn't divide the shard count
     (e.g. the reduced test configs' kv=1 under tp=2) — the cache replicates
     and GSPMD still produces identical tokens, just without the capacity
-    win (docs/PERF.md §Tensor-parallel capacity)."""
+    win (docs/PERF.md §Tensor-parallel capacity).
+
+    Prefix-cache interaction: the radix tree, refcounts, tenant ledgers and
+    LRU clock are HOST-side metadata, mirrored per shard by
+    `ShardedBlockAllocator` (serving/paged.py) — nothing of the tree lives
+    on device.  Because every shard runs the identical, deterministic
+    plan/commit/evict sequence, page number N means "prefix block X" on
+    every shard simultaneously, and a cache hit revives the full kv-head
+    slice set of that page with no collective: each shard's pool rows for
+    page N already hold that shard's head slice, sharded by the rule
+    above."""
 
     def one(path, leaf):
         names = _path_names(path)

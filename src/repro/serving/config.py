@@ -69,6 +69,19 @@ class EngineConfig:
     # downgrades kv4 -> kv8 when the attention backend cannot dequantize
     # packed nibbles in-kernel (xla/reference fallbacks).
     kv_quant: str = "bf16"
+    # Radix-tree prefix cache (docs/PERF.md §Prefix caching): finished
+    # requests park their immutable full KV blocks in a tree keyed by token
+    # blocks; later admissions reuse the longest-common-prefix run and
+    # prefill only the suffix.  Cached (refcount-0) pages are reclaimed by
+    # refcount-aware LRU eviction only when alloc() would otherwise fail,
+    # so the flag trades zero steady-state memory for cross-request reuse.
+    # Paged-cache only; the dense engine ignores it.
+    prefix_cache: bool = True
+    # Per-tenant page quota (None = unlimited): an upper bound on the
+    # worst-case page reservation any one tenant may hold across its
+    # admitted requests, so one tenant's long-context jobs cannot starve
+    # the pool (docs/PERF.md §Prefix caching — tenant quotas).
+    tenant_quota: int | None = None
     sample: str = "greedy"
     seed: int = 0
     spec_decode: bool = False
@@ -122,6 +135,10 @@ class EngineConfig:
             raise ValueError(
                 f"pool_pages must be >= 2 (scratch + one page), "
                 f"got {self.pool_pages}"
+            )
+        if self.tenant_quota is not None and self.tenant_quota < 1:
+            raise ValueError(
+                f"tenant_quota must be >= 1 pages, got {self.tenant_quota}"
             )
         if self.draft_k < 0:
             raise ValueError(f"draft_k must be >= 0, got {self.draft_k}")

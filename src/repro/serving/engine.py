@@ -96,6 +96,25 @@ def make_prefill_step(cfg, enc: EncodingConfig) -> Callable:
     return prefill
 
 
+def make_suffix_prefill_step(cfg, enc: EncodingConfig) -> Callable:
+    """Prefill ONLY the un-cached suffix of a prompt whose leading blocks
+    were served by the radix prefix cache: the cached K/V is gathered into
+    the temp dense cache first (engine._gather_prefix), then this step runs
+    a PREFILL at static offset `pos` — the same prior-concat path chunked
+    prefill uses, so suffix keys attend the gathered prefix exactly as a
+    full prefill would.  `pos` must be a static int (jit static_argnums):
+    the attention slice `cache[:, :pos]` needs a compile-time length."""
+
+    def suffix_prefill(params, tokens, caches, pos):
+        logits, caches, _ = T.forward(
+            params, {"tokens": tokens}, cfg=cfg, enc=enc, phase=Phase.PREFILL,
+            caches=caches, pos=pos, last_logits_only=True,
+        )
+        return logits, caches
+
+    return suffix_prefill
+
+
 def make_chunked_prefill_step(cfg, enc: EncodingConfig, *, chunk: int = 512) -> Callable:
     """Prefill long prompts in fixed chunks (bounded activation memory, the
     standard long-prompt serving pattern).  Each chunk runs as a PREFILL with
@@ -335,6 +354,11 @@ class Request:
     # enqueued_step (stamped by submit()) so no class starves.
     slo_class: str = "standard"
     enqueued_step: int | None = None
+    # Tenant for per-tenant page-quota accounting (paged engines with
+    # EngineConfig.tenant_quota set): admission reserves this request's
+    # worst-case page footprint against its tenant's quota, so one tenant's
+    # long-context jobs cannot starve the pool for everyone else.
+    tenant: str = "default"
 
     def cancel(self) -> None:
         """Ask the engine to drop this request.  Honoured at the next step
@@ -357,7 +381,8 @@ class Admitted:
 class Rejected:
     """submit() refused the request — structured backpressure, never an
     unbounded queue.  `reason` is machine-readable ("queue_full" |
-    "unserviceable_seq" | "unserviceable_pool"); `detail` is for humans."""
+    "unserviceable_seq" | "unserviceable_pool" | "unserviceable_quota");
+    `detail` is for humans."""
 
     uid: int
     reason: str
@@ -664,14 +689,28 @@ class Engine:
             # Tensor-parallel pools mirror one allocator per shard (page
             # identity must agree; COW/preemption/audit stay shard-local —
             # serving/paged.ShardedBlockAllocator).
+            self.prefix_cache = bool(config.prefix_cache)
+            self.tenant_quota = config.tenant_quota
+            # Suffix-only prefill needs the bf16 prior-concat path: a kv8/kv4
+            # gather would dequantize-requantize (bitwise drift vs cache
+            # off), and sharded pools would gather per-shard head slices.
+            # Those layouts still get the write-skip half of the cache win.
+            self._suffix_ok = (
+                self.kv_quant == "bf16" and self.tp_shards == 1
+                and not cfg.sliding_window
+            )
             self.alloc = (
                 paged_lib.ShardedBlockAllocator(
                     pool_pages, block_size, shards=self.tp_shards,
                     kv_quant=self.kv_quant,
+                    prefix_cache=self.prefix_cache,
+                    tenant_quota=self.tenant_quota,
                 )
                 if self.tp_shards > 1
                 else paged_lib.BlockAllocator(
-                    pool_pages, block_size, self.kv_quant
+                    pool_pages, block_size, self.kv_quant,
+                    prefix_cache=self.prefix_cache,
+                    tenant_quota=self.tenant_quota,
                 )
             )
             self.caches = T.cache_init(
@@ -683,14 +722,22 @@ class Engine:
                 (slots, self.num_blocks), paged_lib.SCRATCH_PAGE, np.int32
             )
             self.slot_pages: list[list[int]] = [[] for _ in range(slots)]
-            # Prompt pages whose content has actually been WRITTEN (chunked
-            # prefill writes lazily, but commit_prompt registers pages for
-            # prefix sharing immediately — a later admission may only treat
-            # a shared page as valid history once its owner's chunks have
-            # covered it; see _admit_budget).  Pages re-entering a plan as
-            # private are invalidated there, so re-allocated pages can never
-            # carry a stale marker into a future share.
-            self._prompt_pages_written: set[int] = set()
+            # Written-content tracking lives in the ALLOCATOR now
+            # (BlockAllocator.written / mark_written): chunked prefill writes
+            # lazily, but commit_prompt registers pages for prefix sharing
+            # immediately — a later admission may only treat a shared page as
+            # valid history once its owner's chunks have covered it (see
+            # _admit_budget), and only written pages may be RETAINED in the
+            # radix cache at refcount 0.  alloc() clears the marker on
+            # recycle, so a re-allocated page can never carry a stale marker
+            # into a future share.
+            # Per-tenant worst-case page reservations for live admissions
+            # (quota gate): tenant -> pages reserved by running requests.
+            self._tenant_reserved: dict[str, int] = {}
+            # Satellite-2 accounting: admissions that earlier DEFERRED on an
+            # unwritten shared prefix and later re-planned into extra shared
+            # blocks once the writer's chunks landed.
+            self.deferred_hits = 0
             self.slot_ticket = np.zeros(slots, np.int64)
             self._ticket = 0
             self._tables_dirty = True
@@ -698,6 +745,14 @@ class Engine:
             self.peak_active = 0
         else:
             self.caches = T.cache_init(cfg, slots, max_seq)
+            # Prefix caching and page quotas are properties of the paged
+            # pool; dense engines carry the neutral values so the shared
+            # admission paths (e.g. _admit_budget's quota gate) stay
+            # branch-free.
+            self.prefix_cache = False
+            self.tenant_quota = None
+            self._tenant_reserved = {}
+            self.deferred_hits = 0
         if self.mesh is not None:
             # Head-parallel KV: each shard holds its kv-head slice of every
             # cache page/row; block tables replicate (they mirror the host
@@ -751,8 +806,7 @@ class Engine:
             # max_seq) must fit the pool, or admission could never run it —
             # this is blocks_per_request from encoding.kv_capacity_requests
             # evaluated at the request's own worst case.
-            worst_pos = min(len(req.prompt) + req.max_new_tokens, self.max_seq) - 1
-            worst = worst_pos // self.block_size + 1
+            worst = self._worst_pages(req)
             if worst > self.alloc.capacity:
                 return self._reject(
                     req, "unserviceable_pool",
@@ -760,8 +814,56 @@ class Engine:
                     f"{self.alloc.capacity}; grow pool_pages or shrink the "
                     "request",
                 )
+            if self.tenant_quota is not None and worst > self.tenant_quota:
+                # Same up-front serviceability logic as the pool bound: a
+                # request whose worst case exceeds its tenant's whole quota
+                # could never pass the admission gate — reject instead of
+                # queuing it to starve.
+                return self._reject(
+                    req, "unserviceable_quota",
+                    f"request can need {worst} pages but tenant "
+                    f"{req.tenant!r} is capped at {self.tenant_quota}; raise "
+                    "tenant_quota or shrink the request",
+                )
         self.queue.append(req)
         return Admitted(req.uid)
+
+    def _worst_pages(self, req: Request) -> int:
+        """Worst-case page footprint of one request (decode stops at
+        max_seq) — the quantity submit() checks against the pool and the
+        quota gate reserves per tenant at admission."""
+        worst_pos = min(len(req.prompt) + req.max_new_tokens, self.max_seq) - 1
+        return worst_pos // self.block_size + 1
+
+    def _quota_blocked(self, req: Request) -> bool:
+        """Per-tenant admission gate: reserving this request's worst-case
+        pages must keep its tenant within quota.  Reservations (not live
+        usage) are the gated quantity so a tenant cannot over-admit on pages
+        its running requests merely have not grown into yet."""
+        if self.tenant_quota is None:
+            return False
+        reserved = self._tenant_reserved.get(req.tenant, 0)
+        return reserved + self._worst_pages(req) > self.tenant_quota
+
+    def _reserve_quota(self, req: Request) -> None:
+        if self.tenant_quota is None:
+            return
+        pages = self._worst_pages(req)
+        req._quota_pages = pages
+        self._tenant_reserved[req.tenant] = (
+            self._tenant_reserved.get(req.tenant, 0) + pages
+        )
+
+    def _release_quota(self, req: Request) -> None:
+        pages = getattr(req, "_quota_pages", 0)
+        if self.tenant_quota is None or not pages:
+            return
+        req._quota_pages = 0
+        left = self._tenant_reserved.get(req.tenant, 0) - pages
+        if left > 0:
+            self._tenant_reserved[req.tenant] = left
+        else:
+            self._tenant_reserved.pop(req.tenant, None)
 
     # ---- guarded dispatch + kernel quarantine ------------------------------
 
@@ -785,6 +887,14 @@ class Engine:
         if getattr(self, "token_budget", None) is not None:
             self.mixed_fn = jax.jit(
                 make_mixed_step(self.cfg, self.enc), donate_argnums=(1,)
+            )
+        if self.cache_mode == "paged":
+            # Radix-cache suffix prefill: `pos` (tokens already served by
+            # cached pages) is static — each distinct cached-prefix length
+            # compiles once, like the chunked-prefill offsets.
+            self.suffix_prefill_fn = jax.jit(
+                make_suffix_prefill_step(self.cfg, self.enc),
+                static_argnums=(3,),
             )
 
     def _attn_s(self, phase: Phase) -> int:
@@ -1016,54 +1126,84 @@ class Engine:
     def _admit_paged(self):
         free = [s for s in range(self.slots) if self.slot_req[s] is None]
         batch: list[tuple[int, Request, paged_lib.PagePlan]] = []
-        while free and self.queue:
-            req = self.queue[0]
+        # Radix-cache admissions whose whole shared run is already WRITTEN:
+        # prefill computes only the un-cached suffix ((slot, req, plan, lead)).
+        suffix: list[tuple[int, Request, paged_lib.PagePlan, int]] = []
+        for req in list(self.queue):
+            if not free:
+                break
             if req.max_new_tokens <= 0:
-                self.queue.popleft()
+                self.queue.remove(req)
                 self._finish_degenerate(req)
                 continue
             if req.cancel_requested or self._past_deadline(req):
                 # Deadline/cancel re-check at admission time (the _reap
                 # sweep's snapshot can lapse within the same step).
-                self.queue.popleft()
+                self.queue.remove(req)
                 self._admission_reap(req)
                 continue
+            if self._quota_blocked(req):
+                # Tenant over quota: skip THIS request but keep scanning —
+                # one tenant's quota pressure must not become head-of-line
+                # blocking for every other tenant's queued work.
+                continue
             nblocks, shared = self.alloc.plan_prompt(req.prompt)
-            if nblocks - len(shared) > self.alloc.available():
+            if not self.alloc.plan_fits(nblocks, shared):
                 break  # pool pressure: stop admitting (FIFO order preserved)
-            plan = self.alloc.commit_prompt(req.prompt, nblocks, shared)
+            # Leading run of shared blocks whose K/V has LANDED in the pool:
+            # those token ranges can skip prefill compute entirely.  Shares
+            # of unwritten pages (an admission earlier in this same batch)
+            # still reuse the pages — the batched prefill below writes them
+            # this very step — but force the full-prefill path.
+            lead = 0
+            while lead in shared and self.alloc.is_written(shared[lead]):
+                lead += 1
+            plan = self.alloc.commit_prompt(
+                req.prompt, nblocks, shared, tenant=req.tenant
+            )
             assert plan is not None
-            self.queue.popleft()
-            batch.append((free.pop(0), req, plan))
-        if not batch:
+            self.queue.remove(req)
+            self._reserve_quota(req)
+            s = free.pop(0)
+            if lead == len(shared) and lead > 0 and self._suffix_ok:
+                suffix.append((s, req, plan, lead))
+            else:
+                batch.append((s, req, plan))
+        if not batch and not suffix:
             return
-        # ONE right-padded batched prefill into a TEMPORARY dense cache
-        # (pad rounds to a power of two >= block_size, so padded lengths are
-        # block-aligned and compiled shapes stay O(slots * log(max_seq))),
-        # then scatter the computed K/V blocks into their pool pages.
-        # Shared prefix pages are NOT rewritten: suffix zero-padding is exact
-        # in the chunked attention, so the original owner's prefill already
-        # wrote bitwise-identical content (the conformance tests pin this).
-        maxlen = max(len(r.prompt) for _, r, _ in batch)
-        lp = max(
-            self.block_size,
-            min(1 << (maxlen - 1).bit_length(), self.num_blocks * self.block_size),
-        )
-        toks = np.zeros((len(batch), lp), np.int32)
-        for i, (_, r, _) in enumerate(batch):
-            toks[i, : len(r.prompt)] = r.prompt
-        tmp = T.cache_init(self.cfg, len(batch), lp)
-        _, tmp = self._dispatch(
-            "prefill", "prefill_fn", self.params, jnp.asarray(toks), tmp
-        )
-        self._scatter_prefill(tmp, batch)
-        for s, r, plan in batch:
+        if batch:
+            # ONE right-padded batched prefill into a TEMPORARY dense cache
+            # (pad rounds to a power of two >= block_size, so padded lengths
+            # are block-aligned and compiled shapes stay
+            # O(slots * log(max_seq))), then scatter the computed K/V blocks
+            # into their pool pages.  Shared prefix pages are NOT rewritten:
+            # suffix zero-padding is exact in the chunked attention, so the
+            # original owner's prefill already wrote bitwise-identical
+            # content (the conformance tests pin this).
+            maxlen = max(len(r.prompt) for _, r, _ in batch)
+            lp = max(
+                self.block_size,
+                min(1 << (maxlen - 1).bit_length(),
+                    self.num_blocks * self.block_size),
+            )
+            toks = np.zeros((len(batch), lp), np.int32)
+            for i, (_, r, _) in enumerate(batch):
+                toks[i, : len(r.prompt)] = r.prompt
+            tmp = T.cache_init(self.cfg, len(batch), lp)
+            _, tmp = self._dispatch(
+                "prefill", "prefill_fn", self.params, jnp.asarray(toks), tmp
+            )
+            self._scatter_prefill(tmp, batch)
+        for s, r, plan, lead in suffix:
+            self._prefill_suffix(r, plan, lead)
+        for s, r, plan in batch + [(s, r, p) for s, r, p, _ in suffix]:
             self.slot_req[s] = r
             r.status = "running"
             self.slot_pos[s] = len(r.prompt)
             self.slot_prefill_done[s] = len(r.prompt)
             self.slot_pages[s] = list(plan.pages)
             self.alloc.claim_owner(plan.pages, s)
+            self.alloc.mark_written(plan.pages)
             self.block_table[s, :] = paged_lib.SCRATCH_PAGE
             self.block_table[s, : len(plan.pages)] = plan.pages
             self.slot_ticket[s] = self._ticket
@@ -1138,6 +1278,61 @@ class Engine:
             f"scale pages never scattered: {sorted(pending_scales)}"
         )
 
+    def _gather_prefix(self, tmp, pages: list[int]):
+        """Copy written pool pages into the leading rows of a temp dense
+        prefill cache — the cached-prefix K/V a suffix prefill attends
+        through the prior-concat path.  bf16 layout only (the suffix path is
+        gated off under kv8/kv4: a dequantize-requantize round trip would
+        break bitwise identity with the cache-off run)."""
+        if not pages:
+            return tmp
+        bs = self.block_size
+        n = len(pages)
+        pga = jnp.asarray(pages, jnp.int32)
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.caches)
+        pool_by_path = {jax.tree_util.keystr(p): v for p, v in flat}
+
+        def one(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name not in ("k", "v"):
+                return leaf
+            pool = pool_by_path[jax.tree_util.keystr(path)]
+            if _batch_axis(path) == 1:  # stacked groups (G, P, bs, KV, HD)
+                blocks = pool[:, pga]   # (G, n, bs, KV, HD)
+                seq = blocks.reshape(
+                    blocks.shape[0], 1, n * bs, *blocks.shape[3:]
+                )
+                return leaf.at[:, :, : n * bs].set(seq.astype(leaf.dtype))
+            blocks = pool[pga]          # (n, bs, KV, HD)
+            seq = blocks.reshape(1, n * bs, *blocks.shape[2:])
+            return leaf.at[:, : n * bs].set(seq.astype(leaf.dtype))
+
+        return jax.tree_util.tree_map_with_path(one, tmp)
+
+    def _prefill_suffix(self, req: Request, plan: paged_lib.PagePlan,
+                        lead: int) -> None:
+        """Radix-cache admission with the first `lead` blocks' K/V already
+        in the pool: prefill computes ONLY the un-cached suffix.  The cached
+        prefix is gathered into a temp dense cache, the suffix runs as a
+        PREFILL at static offset lead*block_size (the prior-concat resume
+        path chunked prefill uses), and the computed suffix blocks scatter
+        into the plan's private pages — the prefill-FLOPs-saved half of the
+        cache win (the write-skip half applies on every layout; see
+        docs/PERF.md §Prefix caching)."""
+        bs = self.block_size
+        skip = lead * bs
+        plen = len(req.prompt)
+        lp = max(bs, min(1 << (plen - 1).bit_length(), self.num_blocks * bs))
+        tmp = T.cache_init(self.cfg, 1, lp)
+        tmp = self._gather_prefix(tmp, plan.pages[:lead])
+        toks = np.zeros((1, lp - skip), np.int32)
+        toks[0, : plen - skip] = np.asarray(req.prompt[skip:], np.int32)
+        _, tmp = self._dispatch(
+            "prefill", "suffix_prefill_fn", self.params, jnp.asarray(toks),
+            tmp, skip,
+        )
+        self._scatter_prefill(tmp, [(None, req, plan)])
+
     def _live_table_width(self) -> int:
         """Logical block-table width the NEXT decode dispatch needs: the max
         allocated page count over active slots, bucketed to a power of two
@@ -1182,7 +1377,8 @@ class Engine:
         req.generated.clear()
         req.draft_proposed = req.draft_accepted = 0  # replay re-accounts
         req.status = "queued"
-        self.alloc.free_pages(self.slot_pages[s], owner=s)
+        self._release_quota(req)
+        self.alloc.free_pages(self.slot_pages[s], owner=s, tenant=req.tenant)
         self.slot_pages[s] = []
         self.block_table[s, :] = paged_lib.SCRATCH_PAGE
         self.slot_req[s] = None
@@ -1226,7 +1422,9 @@ class Engine:
                 continue  # preempted while serving an earlier slot
             need = ends[s] // self.block_size + 1
             while self.slot_req[s] is not None and len(self.slot_pages[s]) < need:
-                page = self.alloc.alloc()
+                page = self.alloc.alloc(
+                    owner=s, tenant=self.slot_req[s].tenant
+                )
                 if page is None:
                     victims = [
                         v for v in range(self.slots) if self.slot_req[v] is not None
@@ -1330,7 +1528,8 @@ class Engine:
         if self.scheduler is not None:
             out["continuous"] = dict(self.continuous)
         if self.cache_mode == "paged":
-            out.update(self.alloc.stats)
+            astats = self.alloc.stats
+            out.update(astats)
             out.update(
                 pages_total=self.alloc.capacity,
                 pages_in_use=self.alloc.in_use(),
@@ -1339,6 +1538,27 @@ class Engine:
                 peak_active=self.peak_active,
                 block_size=self.block_size,
             )
+            # Radix prefix-cache observability, one shape-stable dict at
+            # every tp degree (the PR-9 normalization rule: reporting code
+            # must not care about the mesh — per-shard copies of these
+            # counters are asserted identical by ShardedBlockAllocator and
+            # also appear under tp.per_shard_pages).
+            out["prefix_cache"] = {
+                "enabled": self.prefix_cache,
+                "hit_blocks": astats["hit_blocks"],
+                "hit_tokens": astats["hit_tokens"],
+                "lookup_blocks": astats["lookup_blocks"],
+                "hit_rate": (
+                    astats["hit_blocks"] / astats["lookup_blocks"]
+                    if astats["lookup_blocks"] else 0.0
+                ),
+                "evictions": astats["evictions"],
+                "cached_pages": astats["cached_pages"],
+                "deferred_hits": self.deferred_hits,
+            }
+            if self.tenant_quota is not None:
+                out["prefix_cache"]["tenant_quota"] = self.tenant_quota
+                out["prefix_cache"]["tenant_usage"] = self.alloc.tenant_usage()
             if self.tp_shards > 1:
                 out["tp"]["per_shard_pages"] = self.alloc.per_shard_stats()
         return out
@@ -1472,6 +1692,10 @@ class Engine:
                 self.queue.remove(req)
                 self._admission_reap(req)
                 continue
+            if self._quota_blocked(req):
+                # Tenant over quota: skip (never `break` — other tenants'
+                # queued work must keep flowing past a capped tenant).
+                continue
             done = 0
             if self.cache_mode == "paged":
                 nblocks, shared = self.alloc.plan_prompt(req.prompt)
@@ -1487,12 +1711,28 @@ class Engine:
                 # starts past them), unwritten ones are never shared.
                 lead = 0
                 while (lead in shared
-                       and shared[lead] in self._prompt_pages_written):
+                       and self.alloc.is_written(shared[lead])):
                     lead += 1
+                if lead < len(shared) and self._defer_for_writer(req, lead):
+                    # Declined unwritten shares need not be FORFEITED: the
+                    # writer's chunks are still landing, so re-check the
+                    # tree at this request's next admission opportunity
+                    # instead of committing a recomputed private copy now.
+                    # Bounded (_DEFER_CAP) so a stalled writer cannot
+                    # park a candidate forever.
+                    continue
+                if getattr(req, "_defer_lead", None) is not None:
+                    # Admitted after deferring: every block the wait turned
+                    # from an unwritten decline into a real share is a hit
+                    # the old code silently forfeited.
+                    self.deferred_hits += max(0, lead - req._defer_lead)
+                    req._defer_lead = None
                 shared = {j: p for j, p in shared.items() if j < lead}
-                if nblocks - len(shared) > self.alloc.available():
+                if not self.alloc.plan_fits(nblocks, shared):
                     break  # pool pressure: the head candidate waits
-                plan = self.alloc.commit_prompt(req.prompt, nblocks, shared)
+                plan = self.alloc.commit_prompt(
+                    req.prompt, nblocks, shared, tenant=req.tenant
+                )
                 assert plan is not None
                 s = free.pop(0)
                 self.slot_pages[s] = list(plan.pages)
@@ -1503,11 +1743,7 @@ class Engine:
                 self._ticket += 1
                 self._tables_dirty = True
                 done = lead * self.block_size
-                # Pages this row's chunks will (re)write are not valid
-                # prefix content until those chunks land.
-                for pg, sh in zip(plan.pages, plan.shared):
-                    if not sh:
-                        self._prompt_pages_written.discard(pg)
+                self._reserve_quota(req)
             else:
                 s = free.pop(0)
             self.queue.remove(req)
@@ -1516,6 +1752,23 @@ class Engine:
             self.slot_prefill_done[s] = done
             self.slot_pos[s] = done
             self.continuous["chunked_admissions"] += 1
+
+    # A candidate declining unwritten prefix shares re-checks the tree for at
+    # most this many admission opportunities before giving up and recomputing
+    # the prefix privately (satellite: deferred_hits).
+    _DEFER_CAP = 4
+
+    def _defer_for_writer(self, req: Request, lead: int) -> bool:
+        """Whether to hold `req` out of this admission round because part of
+        its tree-matched prefix is still unwritten (the writer's chunks are
+        in flight).  Records the written lead at defer time so the eventual
+        admission can count the blocks the wait recovered."""
+        count = getattr(req, "_defer_count", 0)
+        if count >= self._DEFER_CAP:
+            return False
+        req._defer_count = count + 1
+        req._defer_lead = lead
+        return True
 
     def _finish_slot(self, s: int, *, status: str = "ok",
                      error: str | None = None) -> None:
@@ -1534,9 +1787,15 @@ class Engine:
         self.slot_pos[s] = 0  # freed rows decode (discarded) at pos 0
         self.slot_prefill_done[s] = 0
         if self.cache_mode == "paged":
-            # Freed-on-finish: every page back to the pool (shared pages by
-            # refcount), table row back to scratch.
-            self.alloc.free_pages(self.slot_pages[s], owner=s)
+            # Released-on-finish: every page's refcount drops; table row back
+            # to scratch.  With the prefix cache on, registered+written
+            # blocks whose refcount hits 0 are PARKED in the radix tree
+            # (state "cached") instead of freed — this release IS the
+            # insert-on-finish the radix cache lives on.  Everything else
+            # (trailing decode pages, partial blocks) frees as before.
+            self._release_quota(req)
+            self.alloc.free_pages(self.slot_pages[s], owner=s,
+                                  tenant=req.tenant)
             self.slot_pages[s] = []
             self.block_table[s, :] = paged_lib.SCRATCH_PAGE
             self._tables_dirty = True
@@ -1656,7 +1915,11 @@ class Engine:
         optimization: it must NEVER preempt a live request to fund pages
         that only unverified drafts need — when the window doesn't fit, the
         step falls back to plain one-token decode (which allocates at most
-        the baseline growth page and may legitimately preempt for that)."""
+        the baseline growth page and may legitimately preempt for that).
+        `available()` counts free plus EVICTABLE cached pages: funding a
+        draft window may drain cold prefix cache, but never live requests —
+        the same eviction-before-preemption ordering the radix cache keeps
+        everywhere (docs/ROBUSTNESS.md §Eviction vs preemption)."""
         need = 0
         for s in active:
             pos = max(int(self.slot_pos[s]) - 1, 0) + L - 1
@@ -1669,13 +1932,26 @@ class Engine:
         (slot_pos - 1) define what the slot still needs; trailing pages go
         back to the pool and their table entries back to scratch.  The stale
         draft K/V inside KEPT pages needs no scrubbing — the decode mask
-        (slot <= pos) hides it until a later write replaces it."""
+        (slot <= pos) hides it until a later write replaces it.
+
+        Rollback never frees tree-cached content: draft pages are trailing
+        DECODE growth, past the prompt's immutable blocks, so none of them
+        can be registered in the radix tree (commit_prompt only registers
+        blocks j < shareable_blocks(plen)).  The assert keeps that contract
+        explicit — serving/spec.py documents the other half."""
         need = (int(self.slot_pos[s]) - 1) // self.block_size + 1
         extra = self.slot_pages[s][need:]
         if not extra:
             return
+        assert not any(self.alloc.is_registered(p) for p in extra), (
+            "spec rollback would free radix-registered pages"
+        )
         self.slot_pages[s] = self.slot_pages[s][:need]
-        self.alloc.free_pages(extra)
+        req = self.slot_req[s]
+        self.alloc.free_pages(
+            extra, owner=s,
+            tenant=req.tenant if req is not None else paged_lib.DEFAULT_TENANT,
+        )
         self.block_table[s, need:] = paged_lib.SCRATCH_PAGE
         self._tables_dirty = True
 
@@ -1935,9 +2211,11 @@ class Engine:
                 self.slot_pos[s] = done
                 if self.cache_mode == "paged":
                     # Fully covered prompt blocks are now valid prefix
-                    # content for later prefix-sharing admissions.
-                    for b in range(done // self.block_size):
-                        self._prompt_pages_written.add(self.slot_pages[s][b])
+                    # content for later prefix-sharing admissions — and
+                    # retainable in the radix cache once released.
+                    self.alloc.mark_written(
+                        self.slot_pages[s][: done // self.block_size]
+                    )
                 if done >= len(req.prompt):
                     # Final chunk: its last window index scored position
                     # plen - 1 — the first decode.  Committing it here keeps

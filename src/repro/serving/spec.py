@@ -16,6 +16,17 @@ a draft token only when it equals the model's own greedy choice, so engine
 output is token-identical to plain greedy decode for ANY drafter (the
 token-identity harness in tests/test_spec_decode.py pins this with both this
 drafter and an adversarial one).
+
+Interaction with the paged prefix cache: rejected draft tokens roll the
+slot's position back, and the engine then returns the pages past the new
+block high-water mark to the allocator (`Engine._truncate_slot_pages`).
+That rollback path must only ever hand back PRIVATE, unregistered pages —
+a page registered in the radix prefix tree holds immutable, fully-written
+prompt KV by construction (only whole prompt blocks are ever registered,
+and speculation never rolls back into the prompt), so rollback freeing a
+tree-cached page would corrupt every future request that hits that prefix.
+`_truncate_slot_pages` asserts this contract; the allocator's audit()
+cross-checks it after every chaos/property storm.
 """
 
 from __future__ import annotations

@@ -427,7 +427,10 @@ def test_poisoned_kv_quantized_pages_isolated_to_slot():
             f"survivor uid {uid} diverged under kv8 poison"
         )
     assert eng.alloc.in_use() == 0
-    assert not eng.alloc.scale_live  # scale state freed in lockstep
+    # Scale state tracks the allocated set in lockstep: after the drain the
+    # only allocated pages are the refcount-0 blocks parked in the prefix
+    # tree, and exactly those keep their scales (for revival on a hit).
+    assert eng.alloc.scale_live == eng.alloc.cached
 
 
 def test_chaos_conformance_kv8():
@@ -438,7 +441,8 @@ def test_chaos_conformance_kv8():
     path = os.path.join(SCHEDULE_DIR, "kv_quant_mix.json")
     eng, _ = _conformance(path, kv_quant="kv8")
     assert eng.stats["kv_quant"] == "kv8"
-    assert not eng.alloc.scale_live
+    # Lockstep invariant: scales survive exactly on tree-cached pages.
+    assert eng.alloc.scale_live == eng.alloc.cached
 
 
 # ---------------------------------------------------------------------------
@@ -465,20 +469,25 @@ def test_allocator_share_unreferenced_is_typed():
         alloc.share(p)
 
 
-def test_audit_catches_stale_prefix_registry():
-    """A freed page left in the token-prefix registry is the cross-request
-    corruption precursor: audit must name it."""
+def test_audit_catches_stale_prefix_tree_entry():
+    """A freed page left reachable from the radix tree is the cross-request
+    corruption precursor (a recycled page would serve another tenant's KV
+    as a cache hit): audit must name it."""
     alloc = paged_lib.BlockAllocator(8, 4)
     prompt = np.arange(1, 10, dtype=np.int32)  # 9 tokens -> 2 shareable blocks
     nblocks, shared = alloc.plan_prompt(prompt)
     plan = alloc.commit_prompt(prompt, nblocks, shared)
+    alloc.mark_written(plan.pages)
+    alloc.free_pages(plan.pages)  # shareable blocks park in the tree, rc 0
     stale = plan.pages[0]
-    # Simulate the bug: page freed while its registry entry survives.
-    key = alloc.page_key.pop(stale)
-    alloc.free_page(stale)
-    alloc.registry[key] = stale
-    with pytest.raises(paged_lib.AllocatorInvariantError, match="registry"):
-        alloc.audit([plan.pages[1:]])  # the still-live pages are referenced
+    assert stale in alloc.cached
+    # Simulate the bug: page recycled onto the free list while its tree
+    # node survives (reaping skipped on the free path).
+    alloc.cached.discard(stale)
+    alloc.free.append(stale)
+    with pytest.raises(paged_lib.AllocatorInvariantError,
+                       match="prefix tree references a freed page"):
+        alloc.audit([])
 
 
 def test_audit_leak_names_owner():

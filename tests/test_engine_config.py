@@ -32,6 +32,8 @@ ENC = EncodingConfig(enabled=True, backend="xla")
     (dict(token_budget=0), "token_budget"),
     (dict(slo_aging_steps=0), "slo_aging_steps"),
     (dict(max_queue=-1), "max_queue"),
+    (dict(tenant_quota=0), "tenant_quota"),
+    (dict(tenant_quota=-3), "tenant_quota"),
     (dict(mesh_shape=()), "mesh_shape"),
     (dict(mesh_shape=(0,)), "mesh_shape"),
     (dict(mesh_shape=(2, -1)), "mesh_shape"),
@@ -131,6 +133,11 @@ def test_from_args_maps_fields_and_parses_mesh_strings():
         argparse.Namespace(mesh_shape="2,2")).mesh_shape == (2, 2)
     # Missing attrs keep defaults.
     assert c.block_size == EngineConfig().block_size
+    assert c.prefix_cache is True and c.tenant_quota is None
+    # serve.py's --no-prefix-cache / --tenant-quota route by field name.
+    c2 = EngineConfig.from_args(
+        argparse.Namespace(prefix_cache=False, tenant_quota=12))
+    assert c2.prefix_cache is False and c2.tenant_quota == 12
 
 
 # ---- the Engine deprecation shim -------------------------------------------

@@ -193,6 +193,57 @@ def test_engine_rejects_unserviceable_request():
     assert not eng.queue and eng.rejected[0].status == "rejected"
 
 
+def test_engine_tenant_quota_fairness_under_flood():
+    """One tenant floods the queue; with tenant_quota set, its worst-case
+    reservations are capped so the other tenant is admitted alongside it
+    (quota-blocked requests are SKIPPED, not head-of-line blockers), no
+    tenant's reserved or charged pages ever exceed the quota, and a request
+    whose own worst case outgrows the quota is rejected at submit."""
+    cfg = registry.get_reduced("qwen2-1.5b")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, ENC)
+    quota = 6
+    eng = engine_lib.Engine(
+        params, cfg, ENC, slots=3, max_seq=32, cache_mode="paged",
+        block_size=4, pool_pages=25, tenant_quota=quota,
+    )
+    rng = np.random.RandomState(7)
+    # Each request's worst case is min(6+6, 32)-1 = pos 11 -> 3 pages, so the
+    # quota admits at most two per tenant concurrently.  t0 floods first.
+    uid = 0
+    for tenant, n in (("t0", 5), ("t1", 2)):
+        for _ in range(n):
+            assert eng.submit(engine_lib.Request(
+                uid=uid, tenant=tenant,
+                prompt=rng.randint(1, cfg.vocab_size, 6).astype(np.int32),
+                max_new_tokens=6,
+            ))
+            uid += 1
+    saw_fair = False
+    steps = 0
+    while eng.queue or any(r is not None for r in eng.slot_req):
+        eng.step()
+        eng.audit()
+        for pages in eng._tenant_reserved.values():
+            assert pages <= quota
+        for u in eng.alloc.tenant_usage().values():
+            assert u <= quota + 1e-9
+        running = {r.tenant for r in eng.slot_req if r is not None}
+        if "t1" in running and any(r.tenant == "t0" for r in eng.queue):
+            saw_fair = True        # t1 runs while t0 still has queued work
+    assert saw_fair
+    assert len(eng.finished) == 7 and not eng._tenant_reserved
+    assert eng.stats["prefix_cache"]["tenant_quota"] == quota
+
+    # Worst case 7 pages > quota 6 (but < pool): rejected up front rather
+    # than queued to starve behind an admission gate it can never pass.
+    res = eng.submit(engine_lib.Request(
+        uid=99, tenant="t0", prompt=np.arange(1, 18, dtype=np.int32),
+        max_new_tokens=8,
+    ))
+    assert isinstance(res, engine_lib.Rejected)
+    assert res.reason == "unserviceable_quota"
+
+
 # ---------------------------------------------------------------------------
 # Gather correctness + capacity math (non-hypothesis seeds; the hypothesis
 # sweep lives in tests/test_paged_property.py)

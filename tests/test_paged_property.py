@@ -1,8 +1,11 @@
 """Property-based round-trip tests (hypothesis; skipped when absent, run in
 CI): block-table gathers reproduce dense cache slices for arbitrary valid
 tables, the encoding round-trip (pack/unpack + encoded_matmul) holds over
-ragged shapes, and the paged attention KERNEL path (in-kernel block-table
-gather) stays bit-consistent with the dense kernel on the gathered view."""
+ragged shapes, the paged attention KERNEL path (in-kernel block-table
+gather) stays bit-consistent with the dense kernel on the gathered view,
+and the radix-tree prefix cache (serving/paged.py) survives randomized
+admit/finish/evict/COW storms with exact audits, LCP lookups matching a
+brute-force oracle, and kv8 scale pages moving in lockstep."""
 
 import numpy as np
 import pytest
@@ -17,6 +20,7 @@ from repro.core.encoding import Phase  # noqa: E402
 from repro.kernels import attn as attn_lib  # noqa: E402
 from repro.kernels import ops, ref  # noqa: E402
 from repro.models import layers as L  # noqa: E402
+from repro.serving import paged as paged_lib  # noqa: E402
 
 _SETTINGS = dict(max_examples=25, deadline=None)
 
@@ -296,3 +300,242 @@ def test_paged_kernel_bit_consistent_with_dense_kernel_kv8(
     np.testing.assert_allclose(
         np.asarray(paged), np.asarray(want), rtol=2e-5, atol=2e-5
     )
+
+
+# ---- Radix-tree prefix cache (serving/paged.py) ----------------------------
+
+
+def _blocks(prompt, bs):
+    return [tuple(int(t) for t in prompt[j * bs:(j + 1) * bs])
+            for j in range(max(0, (len(prompt) - 1) // bs))]
+
+
+@settings(**_SETTINGS)
+@given(
+    bs=st.sampled_from([2, 4]),
+    nprompts=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_radix_lcp_matches_bruteforce_oracle(bs, nprompts, seed):
+    """plan_prompt's shared run is EXACTLY the longest-common-prefix of full
+    immutable blocks against everything ever committed — computed here by a
+    brute-force prefix-set oracle, with page identity pinned per chain.  A
+    tiny token alphabet forces dense prefix collisions; the pool is sized so
+    eviction never fires and the oracle stays monotone."""
+    rng = np.random.RandomState(seed)
+    alloc = paged_lib.BlockAllocator(1 + 48, bs)
+    oracle_page: dict[tuple, int] = {}  # block-chain -> page
+    live = []
+    for _ in range(nprompts):
+        prompt = rng.randint(1, 4, size=rng.randint(1, 4 * bs + 4)).astype(
+            np.int32
+        )
+        chain = _blocks(prompt, bs)
+        nblocks, shared = alloc.plan_prompt(prompt)
+        # Oracle LCP: longest leading run of chains already registered.
+        lcp = 0
+        while lcp < len(chain) and tuple(chain[: lcp + 1]) in oracle_page:
+            lcp += 1
+        assert sorted(shared) == list(range(lcp)), (
+            f"shared run {sorted(shared)} != oracle LCP {lcp}"
+        )
+        for j in range(lcp):
+            assert shared[j] == oracle_page[tuple(chain[: j + 1])], (
+                f"block {j}: page {shared[j]} != oracle"
+            )
+        plan = alloc.commit_prompt(prompt, nblocks, shared)
+        assert plan is not None
+        alloc.mark_written(plan.pages)
+        for j in range(len(chain)):
+            oracle_page.setdefault(tuple(chain[: j + 1]), plan.pages[j])
+        live.append(plan)
+        # Randomly finish some earlier requests: their immutable blocks park
+        # in the tree (never leave the oracle — the pool never evicts here).
+        while len(live) > 1 and rng.rand() < 0.5:
+            done = live.pop(int(rng.randint(len(live))))
+            alloc.free_pages(done.pages)
+        alloc.audit([p.pages for p in live])
+
+
+@settings(**_SETTINGS)
+@given(
+    bs=st.sampled_from([2, 4]),
+    pool=st.integers(8, 16),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_eviction_never_touches_live_chains(bs, pool, seed):
+    """Draining the pool with raw allocs evicts ONLY cold cached leaves:
+    pages of the one live plan are never handed out again, and once just the
+    live chain remains, alloc() returns None instead of preempting it."""
+    rng = np.random.RandomState(seed)
+    alloc = paged_lib.BlockAllocator(1 + pool, bs)
+    # Warm the tree with a few finished (cached) chains...
+    for _ in range(3):
+        prompt = rng.randint(1, 4, size=rng.randint(1, 3 * bs)).astype(np.int32)
+        nblocks, shared = alloc.plan_prompt(prompt)
+        plan = alloc.commit_prompt(prompt, nblocks, shared)
+        if plan is None:
+            continue
+        alloc.mark_written(plan.pages)
+        alloc.free_pages(plan.pages)
+    # ...and keep ONE plan live.
+    prompt = rng.randint(1, 4, size=2 * bs + 1).astype(np.int32)
+    nblocks, shared = alloc.plan_prompt(prompt)
+    plan = alloc.commit_prompt(prompt, nblocks, shared)
+    if plan is None:
+        return  # tiny pool + warm chains left no room: nothing to protect
+    alloc.mark_written(plan.pages)
+    livepages = set(plan.pages)
+    held = []
+    while True:
+        page = alloc.alloc(owner=7)
+        if page is None:
+            break
+        assert page not in livepages, "eviction recycled a live page"
+        held.append(page)
+        alloc.audit([plan.pages, held])
+    # Pool exhausted: everything except the live chain was reclaimable.
+    assert len(held) + len(plan.pages) == alloc.capacity
+    for p in livepages:
+        assert alloc.refcount[p] > 0
+    alloc.free_pages(held, owner=7)
+    alloc.free_pages(plan.pages)
+    alloc.audit([])
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bs=st.sampled_from([2, 4]),
+    pool=st.integers(6, 14),
+    kv_quant=st.sampled_from(["bf16", "kv8"]),
+    quota=st.sampled_from([None, 4]),
+    nops=st.integers(10, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_audit_exact_under_admit_finish_evict_cow_storm(
+    bs, pool, kv_quant, quota, nops, seed
+):
+    """Randomized storms of admit (partial writes included), finish, COW
+    shares, and raw-alloc pool pressure (forcing evictions) keep audit()
+    exact after EVERY op — and under kv8 the scale pages track the allocated
+    set (referenced + cached) in lockstep throughout."""
+    rng = np.random.RandomState(seed)
+    alloc = paged_lib.BlockAllocator(
+        1 + pool, bs, kv_quant=kv_quant, tenant_quota=quota
+    )
+    live: list[tuple[list, str]] = []   # (pages, tenant) per virtual slot
+    held: list[int] = []                # raw-alloc'd pressure pages
+    for _ in range(nops):
+        op = rng.choice(["admit", "finish", "cow", "pressure", "release"])
+        tenant = str(rng.choice(["a", "b"]))
+        if op == "admit":
+            prompt = rng.randint(1, 4, size=rng.randint(1, 3 * bs + 2)).astype(
+                np.int32
+            )
+            nblocks, shared = alloc.plan_prompt(prompt)
+            plan = alloc.commit_prompt(prompt, nblocks, shared, tenant=tenant)
+            if plan is not None:
+                # Partial write: only a leading run lands (mirrors chunked
+                # prefill); unwritten registered blocks must unregister
+                # their whole subtree when freed early.
+                k = int(rng.randint(0, len(plan.pages) + 1))
+                alloc.mark_written(plan.pages[:k])
+                live.append((plan.pages, tenant))
+        elif op == "finish" and live:
+            pages, t = live.pop(int(rng.randint(len(live))))
+            alloc.free_pages(pages, tenant=t)
+        elif op == "cow" and live:
+            # Sharing only ever flows through the tree (plan/commit): pick a
+            # REGISTERED live page, as a second reader of its prefix would.
+            pages, t = live[int(rng.randint(len(live)))]
+            p = pages[int(rng.randint(len(pages)))]
+            if alloc.refcount[p] > 0 and alloc.is_registered(p):
+                alloc.share(p, tenant=tenant)
+                live.append(([p], tenant))
+        elif op == "pressure":
+            page = alloc.alloc(owner=9, tenant=tenant)
+            if page is not None:
+                held.append(page)
+        elif op == "release" and held:
+            alloc.free_page(held.pop(), owner=9)
+        tables = [pages for pages, _ in live] + ([held] if held else [])
+        alloc.audit(tables)
+        if kv_quant != "bf16":
+            referenced = {
+                p for p in range(1, alloc.num_pages) if alloc.refcount[p] > 0
+            }
+            assert alloc.scale_live == referenced | alloc.cached, (
+                "kv8 scale pages out of lockstep"
+            )
+    for pages, t in live:
+        alloc.free_pages(pages, tenant=t)
+    alloc.free_pages(held, owner=9)
+    alloc.audit([])
+    assert alloc.in_use() == 0
+    assert alloc.stats["allocs"] == alloc.stats["frees"]
+
+
+def test_pool_spike_chaos_against_warm_cache():
+    """Replay pool_spike seizures (serving/faults.py) against a WARM prefix
+    cache: a second wave of shared-prefix requests admits off cached chains
+    while the fault schedule drains the free list, forcing evictions to race
+    revivals.  Survivors stay token-identical to the fault-free warm run,
+    the audit stays exact every step, and the drain leaks nothing."""
+    import jax
+    from repro.configs import registry
+    from repro.core.packed import EncodingConfig
+    from repro.models import transformer as T
+    from repro.serving import engine as engine_lib
+    from repro.serving import faults as faults_lib
+
+    cfg = registry.get_reduced("qwen2-1.5b")
+    enc = EncodingConfig(enabled=True, backend="xla")
+    params = T.model_init(jax.random.PRNGKey(0), cfg, enc)
+    rng = np.random.RandomState(7)
+    base = rng.randint(1, cfg.vocab_size, 16).astype(np.int32)  # 2 blocks @ 8
+    prompts = [
+        np.concatenate([base, rng.randint(1, cfg.vocab_size,
+                                          4 + i).astype(np.int32)])
+        for i in range(4)
+    ]
+
+    def run(sched):
+        eng = engine_lib.Engine(
+            params, cfg, enc, fault_hooks=sched,
+            slots=2, max_seq=64, block_size=8, pool_pages=14,
+        )
+        for wave in range(2):
+            for i, p in enumerate(prompts):
+                assert eng.submit(engine_lib.Request(
+                    uid=wave * 10 + i, prompt=p, max_new_tokens=6,
+                    tenant=f"t{i % 2}",
+                ))
+            steps = 0
+            while eng.queue or any(r is not None for r in eng.slot_req):
+                assert steps < 300, "engine deadlocked under pool_spike"
+                eng.step()
+                eng.audit()
+                steps += 1
+        if sched is not None:
+            sched.drain(eng)
+            eng.audit()
+        return eng
+
+    gold = run(None)
+    want = {r.uid: list(r.generated) for r in gold.finished}
+    assert gold.alloc.stats["hit_blocks"] > 0, "second wave never hit"
+
+    sched = faults_lib.FaultSchedule(
+        [faults_lib.Fault(s, "pool_spike", pages=3, hold=2)
+         for s in (2, 9, 16, 23, 30)],
+        seed=7,
+    )
+    eng = run(sched)
+    assert {r.uid for r in eng.finished} == set(want)
+    for r in eng.finished:
+        assert r.status == "ok", (r.uid, r.status, r.error)
+        assert list(r.generated) == want[r.uid], (
+            f"uid {r.uid} diverged under pool_spike on a warm cache"
+        )
+    assert eng.alloc.in_use() == 0
+    assert eng.alloc.stats["allocs"] == eng.alloc.stats["frees"]

@@ -411,12 +411,14 @@ def test_chunked_prefill_shared_prefix_partial_boundary_block():
 
 
 def test_chunked_prefill_shared_prefix_unwritten_pages():
-    """Both prefix-sharing prompts admit in the SAME step: the second's
-    matching registry pages exist but hold NO content yet (commit_prompt
-    registers before chunks write).  Admission must DECLINE the share —
-    a row prefilling from inside a shared block would spray its window-pad
-    writes across the owner's history — and give the row private pages.
-    Output is unchanged; no phantom sharing is counted."""
+    """Both prefix-sharing prompts arrive together, but the second's
+    matching radix-tree pages hold NO content yet (commit_prompt registers
+    before chunks write).  A row prefilling from inside an unwritten shared
+    block would read garbage history, so admission must not take the share
+    early — it DEFERS the second admission until the writer's chunks cover
+    the shared prefix, then re-plans into a REAL share (surfaced as
+    deferred_hits).  Output is unchanged; no phantom sharing before the
+    content lands."""
     bs = 8
     p0, p1 = _prefix_pair(bs)
     ref = _engine(slots=2, cache_mode="paged", block_size=bs)
@@ -425,12 +427,13 @@ def test_chunked_prefill_shared_prefix_unwritten_pages():
 
     eng = _engine(slots=2, cache_mode="paged", block_size=bs, token_budget=6)
     _submit_all(eng, [p0, p1], max_new=6)
-    eng.step()  # both admitted at once; uid 1's prefix pages are unwritten
+    eng.step()  # uid 0 admits; uid 1 defers on the unwritten prefix
     eng.audit()
     assert int(eng.slot_prefill_done.max()) <= 6  # nobody skipped ahead
     assert _drive(eng) == gold
     st = eng.stats
-    assert st["shared_hits"] == 0 and st["cow_events"] == 0
+    assert st["prefix_cache"]["deferred_hits"] > 0  # share recovered, not lost
+    assert st["shared_hits"] >= 2   # both full prefix blocks reused post-defer
     assert st["pages_in_use"] == 0
 
 
@@ -509,3 +512,30 @@ def test_mixed_dispatch_key_hits_gemm_bucket():
     _attn_key, mm_key = eng._dispatch_keys("mixed")
     assert "|big|" in mm_key
     assert registry_lib.resolve_key(mm_key).backend != "fused"
+
+
+def test_deferred_hit_recovers_unwritten_prefix():
+    """A request whose tree-matched prefix is still being WRITTEN by an
+    in-flight chunked prefill defers instead of forfeiting the reuse: it
+    re-checks the tree at its next admission opportunity, admits off the
+    now-written blocks once the writer's chunks commit, and the recovered
+    blocks are counted in stats["prefix_cache"]["deferred_hits"] — all
+    without perturbing the generated tokens."""
+    rng = np.random.RandomState(3)
+    prompt = rng.randint(1, CFG.vocab_size, 33).astype(np.int32)
+    mk = dict(cache_mode="paged", block_size=8, token_budget=8, slots=2)
+
+    gold_eng = _engine(**mk)
+    assert gold_eng.submit(engine_lib.Request(
+        uid=0, prompt=prompt, max_new_tokens=6))
+    gold = _drive(gold_eng)[0]
+
+    eng = _engine(**mk)
+    for uid in (0, 1):  # identical prompts: uid 1 races uid 0's prefill
+        assert eng.submit(engine_lib.Request(
+            uid=uid, prompt=prompt.copy(), max_new_tokens=6))
+    out = _drive(eng)
+    assert out[0] == gold and out[1] == gold
+    pc = eng.stats["prefix_cache"]
+    assert pc["deferred_hits"] > 0, "unwritten-prefix share was forfeited"
+    assert pc["hit_blocks"] >= pc["deferred_hits"]
